@@ -1,0 +1,50 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS = os.environ.get("RESULTS_DIR", "results")
+
+
+def load_fl(method: str):
+    # prefer the extended (warm-start continued) run when present
+    for suffix in ("_ext", ""):
+        path = os.path.join(RESULTS, f"fl_{method}{suffix}.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                return json.load(f)
+    return None
+
+
+def load_dryrun():
+    out = {}
+    d = os.path.join(RESULTS, "dryrun")
+    if not os.path.isdir(d):
+        return out
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json"):
+            with open(os.path.join(d, fn)) as f:
+                rec = json.load(f)
+            out[fn[:-5]] = rec
+    return out
+
+
+def timeit(fn, *args, n_warmup: int = 2, n_iter: int = 10) -> float:
+    """Median wall time per call in microseconds."""
+    import jax
+    for _ in range(n_warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

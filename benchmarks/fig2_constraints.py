@@ -1,0 +1,46 @@
+"""Paper Fig. 2: per-round memory & communication constraint satisfaction.
+
+Emits round-by-round usage/budget ratios for both methods (the plotted
+quantity) and the violation summary the paper quotes (FedAvg up to 1.1x
+memory / 5.2x comm; CAFL-L within bounds by ~round 50).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, load_fl
+
+
+def rows():
+    out = []
+    for method in ("fedavg", "cafl"):
+        data = load_fl(method)
+        if not data:
+            return [("fig2.missing_results", 0.0, "run repro.launch.train")]
+        hist = data["history"]
+        mem = [r["ratios"]["memory"] for r in hist]
+        comm = [r["ratios"]["comm"] for r in hist]
+        out.append((f"fig2.{method}.mem_ratio_max", 0.0, f"{max(mem):.2f}x"))
+        out.append((f"fig2.{method}.comm_ratio_max", 0.0, f"{max(comm):.2f}x"))
+        tail = slice(-10, None)
+        out.append((f"fig2.{method}.mem_ratio_tail", 0.0,
+                    f"{np.mean(mem[tail]):.2f}x"))
+        out.append((f"fig2.{method}.comm_ratio_tail", 0.0,
+                    f"{np.mean(comm[tail]):.2f}x"))
+        # trace CSV (round:ratio pairs, decimated)
+        step = max(1, len(hist) // 12)
+        trace_m = " ".join(f"{r['round']}:{r['ratios']['memory']:.2f}"
+                           for r in hist[::step])
+        trace_c = " ".join(f"{r['round']}:{r['ratios']['comm']:.2f}"
+                           for r in hist[::step])
+        out.append((f"fig2.{method}.mem_trace", 0.0, trace_m))
+        out.append((f"fig2.{method}.comm_trace", 0.0, trace_c))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Render markdown tables for EXPERIMENTS.md from results/.
+
+    PYTHONPATH=src python -m benchmarks.gen_report [--section dryrun|roofline|paper]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import RESULTS, load_dryrun, load_fl
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["paligemma-3b", "recurrentgemma-2b", "minitron-8b", "gemma2-9b",
+              "xlstm-1.3b", "phi3.5-moe-42b-a6.6b", "qwen2-72b",
+              "mistral-large-123b", "deepseek-v3-671b", "seamless-m4t-medium"]
+
+
+def fmt_e(x):
+    return f"{x:.2e}" if x is not None else "—"
+
+
+def dryrun_table() -> str:
+    recs = load_dryrun()
+    lines = ["| arch | shape | mesh | status | lower(s) | compile(s) | "
+             "mem/dev(GB) | fits 16GB | HLO bytes |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("singlepod", "multipod"):
+                key = f"{arch}__{shape}__{mesh}"
+                r = recs.get(key)
+                if r is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | PENDING | | | | | |")
+                    continue
+                if r.get("status") != "ok":
+                    err = r.get("error", "").splitlines()[-1][:60] if r.get("error") else "?"
+                    lines.append(f"| {arch} | {shape} | {mesh} | ERROR {err} | | | | | |")
+                    continue
+                m = r.get("memory", {})
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | ok | {r.get('lower_s', 0):.1f} "
+                    f"| {r.get('compile_s', 0):.1f} | "
+                    f"{m.get('per_device_total_gb', 0):.2f} | "
+                    f"{'yes' if m.get('fits_v5e_16gb') else 'NO'} | "
+                    f"{r.get('hlo_bytes', 0)//1000}k |")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh: str = "singlepod") -> str:
+    recs = load_dryrun()
+    lines = ["| arch | shape | t_compute(s) | t_memory(s) | t_collective(s) | "
+             "dominant | MODEL/HLO flops | coll GB/dev | note |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get(f"{arch}__{shape}__{mesh}")
+            if not r or r.get("status") != "ok":
+                continue
+            rl = r["roofline"]
+            ufr = rl.get("useful_flops_ratio")
+            ufr_s = f"{ufr:.2f}" if ufr else "—"
+            note = ""
+            if r["cost"].get("dot_misses"):
+                note += f"dot_misses={r['cost']['dot_misses']} "
+            if r["cost"].get("unknown_trip_counts"):
+                note += f"unk_trips={r['cost']['unknown_trip_counts']}"
+            lines.append(
+                f"| {arch} | {shape} | {fmt_e(rl['t_compute_s'])} | "
+                f"{fmt_e(rl['t_memory_s'])} | {fmt_e(rl['t_collective_s'])} | "
+                f"**{rl['dominant']}** | {ufr_s} | "
+                f"{rl['collective_bytes_per_device']/1e9:.1f} | {note} |")
+    return "\n".join(lines)
+
+
+def paper_table() -> str:
+    fa, ca = load_fl("fedavg"), load_fl("cafl")
+    if not fa or not ca:
+        return "(FL results pending)"
+    from benchmarks.table1 import PAPER
+    lines = ["| metric | budget | FedAvg (ours) | FedAvg (paper) | "
+             "CAFL-L (ours) | CAFL-L (paper) |", "|---|---|---|---|---|---|"]
+    keymap = {"energy": "Energy", "comm_mb": "Comm (MB)", "temp": "Temp",
+              "memory": "Memory", "val_loss": "Val. loss"}
+    for k, label in keymap.items():
+        budget = PAPER["budget"].get(k, "—")
+        lines.append(
+            f"| {label} | {budget} | {fa['summary'][k]:.4g} | "
+            f"{PAPER['fedavg'][k]:.4g} | {ca['summary'][k]:.4g} | "
+            f"{PAPER['cafl'][k]:.4g} |")
+    fs, cs = fa["summary"], ca["summary"]
+    lines.append("")
+    lines.append(f"Improvements vs FedAvg (ours / paper): "
+                 f"energy {100*(1-cs['energy']/fs['energy']):.0f}%/70% · "
+                 f"comm {100*(1-cs['comm_mb']/fs['comm_mb']):.0f}%/95% · "
+                 f"memory {100*(1-cs['memory']/fs['memory']):.0f}%/23% · "
+                 f"val-loss +{100*(cs['val_loss']/fs['val_loss']-1):.0f}%/+9%")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+    if args.section in ("dryrun", "all"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table())
+    if args.section in ("roofline", "all"):
+        print("\n### Roofline (single-pod)\n")
+        print(roofline_table())
+    if args.section in ("paper", "all"):
+        print("\n### Paper Table 1\n")
+        print(paper_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Timed microbenchmarks (CPU wall-clock): quantization round-trip,
+blockwise attention, charlm train step, FL LocalTrain round. These are the
+only true `us_per_call` rows — the table/figure benchmarks are analyses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+
+
+def rows():
+    out = []
+    rng = np.random.default_rng(0)
+
+    # quantization round-trip (the CAFL-L wire hot spot), ref path on CPU
+    from repro.kernels import ops
+    x = jnp.asarray(rng.normal(size=(1 << 20,)).astype(np.float32))
+    for bits in (8, 2):
+        f = jax.jit(lambda v, b=bits: ops.quantize_dequantize(v, bits=b))
+        us = timeit(f, x)
+        gbps = x.size * 4 / (us / 1e6) / 1e9
+        out.append((f"kernel.quantize_roundtrip.{bits}bit.1M", us,
+                    f"{gbps:.2f}GB/s"))
+
+    # blockwise attention (the model hot path the Pallas kernel mirrors)
+    from repro.models.layers import blockwise_attention
+    q = jnp.asarray(rng.normal(size=(1, 1024, 8, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1024, 8, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 1024, 8, 64)).astype(np.float32))
+    f = jax.jit(lambda a, b, c: blockwise_attention(
+        a, b, c, window=None, softcap=None, q_chunk=256))
+    us = timeit(f, q, k, v, n_iter=5)
+    flops = 2 * 2 * 1024 * 1024 // 2 * 8 * 64  # ~causal qk+pv
+    out.append(("kernel.blockwise_attention.1k", us,
+                f"{flops/(us/1e6)/1e9:.1f}GFLOP/s"))
+
+    # charlm train step (paper model)
+    from repro.configs import get_config
+    from repro.models import build
+    cfg = get_config("charlm-shakespeare")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((32, 32), jnp.int32),
+             "targets": jnp.zeros((32, 32), jnp.int32)}
+    gf = jax.jit(lambda p, b: jax.value_and_grad(
+        model.train_loss, has_aux=True)(p, b)[0][0])
+    us = timeit(gf, params, batch, n_iter=5)
+    out.append(("charlm.grad_step.b32s32", us,
+                f"{32*32/(us/1e6):.0f}tok/s"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Roofline table (assignment §Roofline): three terms per
+(arch x input-shape x mesh) from the compiled dry-run, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio, and per-device memory."""
+from __future__ import annotations
+
+from benchmarks.common import emit, load_dryrun
+
+
+def rows():
+    recs = load_dryrun()
+    if not recs:
+        return [("roofline.missing_results", 0.0,
+                 "run python -m repro.launch.dryrun --all --mesh both")]
+    out = []
+    n_ok = n_err = 0
+    for key, rec in recs.items():
+        if rec.get("status") != "ok":
+            n_err += 1
+            out.append((f"roofline.{key}", 0.0, "ERROR"))
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        m = rec.get("memory", {})
+        ufr = r.get("useful_flops_ratio")
+        out.append((
+            f"roofline.{key}", 0.0,
+            f"tc={r['t_compute_s']:.3e}s tm={r['t_memory_s']:.3e}s "
+            f"tcoll={r['t_collective_s']:.3e}s dom={r['dominant']} "
+            f"useful={ufr:.2f} " if ufr else
+            f"tc={r['t_compute_s']:.3e}s tm={r['t_memory_s']:.3e}s "
+            f"tcoll={r['t_collective_s']:.3e}s dom={r['dominant']} "))
+        out[-1] = (out[-1][0], 0.0, out[-1][2] +
+                   f"mem/dev={m.get('per_device_total_gb', 0):.2f}GB")
+    out.append(("roofline.summary", 0.0, f"{n_ok} ok, {n_err} errors"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

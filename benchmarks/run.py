@@ -1,0 +1,40 @@
+"""Benchmark harness entry point — one module per paper table/figure plus
+the roofline table and timed kernel microbenchmarks.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig2,...]
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = ["table1", "fig2_constraints", "fig3_energy_temp",
+           "fig4_convergence", "roofline", "kernel_bench"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of modules")
+    args = ap.parse_args()
+    mods = MODULES if not args.only else [
+        m for m in MODULES if any(m.startswith(p) for p in args.only.split(","))]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["rows"])
+            for row_name, us, derived in mod.rows():
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{name}.EXCEPTION,0.0,\"{traceback.format_exc(limit=1)}\"",
+                  file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Table 1: quantitative comparison averaged over final rounds.
+
+Reads results/fl_{fedavg,cafl}.json (produced by repro.launch.train) and
+prints the reproduction next to the paper's numbers.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, load_fl
+
+PAPER = {
+    "budget": {"energy": 1.20e6, "comm_mb": 0.60, "temp": 1.00, "memory": 0.26},
+    "fedavg": {"energy": 4.52e6, "comm_mb": 5.18, "temp": 0.62, "memory": 0.31,
+               "val_loss": 1.93},
+    "cafl": {"energy": 1.35e6, "comm_mb": 0.28, "temp": 0.57, "memory": 0.24,
+             "val_loss": 2.10},
+}
+
+
+def rows():
+    out = []
+    fa = load_fl("fedavg")
+    ca = load_fl("cafl")
+    if not fa or not ca:
+        return [("table1.missing_results", 0.0, "run repro.launch.train first")]
+    for method, data in (("fedavg", fa), ("cafl", ca)):
+        s = data["summary"]
+        for key in ("energy", "comm_mb", "memory", "temp", "val_loss"):
+            paper_v = PAPER[method][key if key != "comm_mb" else "comm_mb"]
+            ours = s[key]
+            out.append((f"table1.{method}.{key}", 0.0,
+                        f"ours={ours:.4g} paper={paper_v:.4g}"))
+    # headline improvements (paper: 70% energy, 95% comm, 23% memory, +9% loss)
+    fs, cs = fa["summary"], ca["summary"]
+    out.append(("table1.improvement.energy_pct", 0.0,
+                f"{100*(1-cs['energy']/fs['energy']):.1f}% (paper 70%)"))
+    out.append(("table1.improvement.comm_pct", 0.0,
+                f"{100*(1-cs['comm_mb']/fs['comm_mb']):.1f}% (paper 95%)"))
+    out.append(("table1.improvement.memory_pct", 0.0,
+                f"{100*(1-cs['memory']/fs['memory']):.1f}% (paper 23%)"))
+    out.append(("table1.improvement.temp_pct", 0.0,
+                f"{100*(1-cs['temp']/fs['temp']):.1f}% (paper 8%)"))
+    out.append(("table1.val_loss_gap_pct", 0.0,
+                f"+{100*(cs['val_loss']/fs['val_loss']-1):.1f}% (paper +9%)"))
+    out.append(("table1.actual_wire_mb.cafl", 0.0,
+                f"{cs['wire_mb_actual']:.3f} (measured bytes incl. scales)"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpointing.checkpoint import load, save  # noqa: F401

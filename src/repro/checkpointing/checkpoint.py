@@ -1,0 +1,64 @@
+"""msgpack + raw-numpy checkpointing (no orbax in this container).
+
+Stores an arbitrary pytree of arrays: structure is flattened to
+path-keyed entries; each leaf is (dtype, shape, bytes). Works for params,
+optimizer state, FL server state (duals, history) alike.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _paths(tree[k], f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _paths(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    entries = {}
+    for key, leaf in _paths(tree):
+        arr = np.asarray(leaf)
+        entries[key] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                        "data": arr.tobytes()}
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(entries))
+
+
+def load(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a pytree template)."""
+    with open(path, "rb") as f:
+        entries = msgpack.unpackb(f.read())
+    leaves = {}
+    for key, ent in entries.items():
+        dt = ent["dtype"]
+        arr = np.frombuffer(ent["data"], dtype=dt).reshape(ent["shape"])
+        leaves[key] = arr
+    flat_keys = [k for k, _ in _paths(like)]
+    missing = [k for k in flat_keys if k not in leaves]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]} ...")
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(tree[k], f"{prefix}/{k}") for k in tree}
+        if isinstance(tree, (list, tuple)):
+            typ = type(tree)
+            vals = [rebuild(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+            return typ(vals) if typ is not tuple else tuple(vals)
+        arr = leaves[prefix]
+        like_leaf = np.asarray(tree)
+        return np.asarray(arr, dtype=like_leaf.dtype)
+
+    return rebuild(like)

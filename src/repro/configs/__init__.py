@@ -1,0 +1,7 @@
+from repro.configs.base import (  # noqa: F401
+    Budgets, DualConfig, FLConfig, FrontendConfig, InputShape, INPUT_SHAPES,
+    MLAConfig, MoEConfig, ModelConfig, RGLRUConfig, XLSTMConfig,
+)
+from repro.configs.registry import (  # noqa: F401
+    ARCH_IDS, get_config, get_fl_config, get_smoke_config,
+)

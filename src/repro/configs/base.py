@@ -1,0 +1,197 @@
+"""Config dataclasses for the repro framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the CAFL-L
+federated-learning experiment (the paper's own setting) is a ``FLConfig``
+wrapping a small ``ModelConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    first_dense_layers: int = 0       # leading layers that use a dense MLP
+    d_ff_dense: int = 0               # d_ff of those dense layers / shared expert
+    group_size: int = 2048            # tokens per dispatch group (GShard-style)
+    router_noise: float = 0.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """Griffin/RecurrentGemma recurrent block."""
+    lru_width: int = 0                # 0 -> d_model
+    conv_width: int = 4
+    c_const: float = 8.0              # the fixed `c` in a_t = exp(-c softplus(Λ) σ(r))
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block stack (mLSTM-dominant with interleaved sLSTM)."""
+    mlstm_per_unit: int = 7           # xLSTM[7:1]
+    slstm_per_unit: int = 1
+    chunk_size: int = 64              # chunkwise-parallel mLSTM chunk
+    proj_factor_mlstm: float = 2.0    # up-projection factor (pre-LSTM)
+    proj_factor_slstm: float = 1.3334
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Stub modality frontend: input_specs() provides precomputed embeddings."""
+    kind: str                         # "vision" | "audio"
+    embed_dim: int                    # SigLIP 1152 / speech-encoder 1024
+    num_prefix_tokens: int = 256      # vision: patch tokens prepended
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # --- attention ---
+    attn_pattern: Tuple[str, ...] = ("global",)   # per-layer unit, cycled
+    window: int = 4096                # local-attention window
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    # decode-time sliding window for long-context shapes (sub-quadratic
+    # variant; None -> full cache)
+    decode_window: Optional[int] = 8192
+    # --- specials ---
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    # block pattern for hybrid/ssm, cycled over layers: "attn"|"rec"|"mlstm"|"slstm"
+    block_pattern: Tuple[str, ...] = ()
+    # --- enc-dec ---
+    encdec: bool = False
+    enc_layers: int = 0
+    # --- frontend stub ---
+    frontend: Optional[FrontendConfig] = None
+    # --- misc ---
+    mlp_type: str = "swiglu"          # swiglu | geglu | gelu | none
+    norm_type: str = "rms"            # rms | layer
+    post_norms: bool = False          # gemma2-style post-attn/post-ffn norms
+    tie_embeddings: bool = True
+    embed_scale: bool = False         # gemma multiplies embeddings by sqrt(d)
+    learned_pos_emb: int = 0          # >0: use learned positions (charlm)
+    max_seq_len: int = 524_288
+    param_dtype: jnp.dtype = jnp.bfloat16
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    # attention chunking for the pure-JAX blockwise implementation
+    q_chunk: int = 2048
+    source: str = ""                  # citation
+
+    @property
+    def d_head_total(self) -> int:
+        return self.num_heads * self.head_dim
+
+    def layer_kind(self, i: int) -> str:
+        if self.block_pattern:
+            return self.block_pattern[i % len(self.block_pattern)]
+        return "attn"
+
+    def attn_type(self, i: int) -> str:
+        return self.attn_pattern[i % len(self.attn_pattern)]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class Budgets:
+    """Per-round resource budgets  B = (E_b, C_b, M_b, T_b)  (paper Eq. 2)."""
+    energy: float = 1.2e6
+    comm_mb: float = 0.60
+    memory: float = 0.26
+    temp: float = 1.00
+
+
+@dataclass(frozen=True)
+class DualConfig:
+    """Lagrangian dual optimization (paper Eq. 4)."""
+    eta: float = 0.35                 # dual learning rate
+    deadzone: float = 0.05            # |u/b - 1| <= dz  ->  no update
+    lambda_max: float = 10.0
+    # policy coefficients (paper Eq. 5-7)
+    alpha_k: float = 1.0
+    beta_s: float = 0.12
+    gamma_b: float = 0.25
+    # floors (paper: k>=1, s>=10, b>=8)
+    k_min: int = 1
+    s_min: int = 10
+    b_min: int = 8
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    """Federated-learning experiment configuration (paper §5)."""
+    num_clients: int = 16
+    clients_per_round: int = 6
+    rounds: int = 60
+    # baseline knobs (k_base, s_base, b_base) — paper does not publish these;
+    # chosen so FedAvg violates comm ~5x and memory ~1.1x as in Fig. 2.
+    k_base: int = 6                   # all layers unfrozen
+    s_base: int = 40
+    b_base: int = 32
+    seq_len: int = 128
+    lr: float = 1e-3
+    optimizer: str = "adamw"
+    weight_decay: float = 0.01
+    seed: int = 0
+    method: str = "cafl"              # cafl | fedavg
+    budgets: Budgets = field(default_factory=Budgets)
+    duals: DualConfig = field(default_factory=DualConfig)
+    eval_batches: int = 8
+    eval_batch_size: int = 64
+    # non-IID partition strength (0 = IID shards)
+    noniid_alpha: float = 0.0
+    # ablation: disable Eq. 8 token-budget preservation (grad_accum = 1)
+    token_budget: bool = True
+
+    def replace(self, **kw) -> "FLConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",   524_288, 1,   "decode"),
+}

@@ -1,0 +1,34 @@
+"""PaliGemma-3B language backbone [arXiv:2407.07726].
+
+SigLIP vision tower is a stub frontend (assignment carve-out):
+``input_specs`` provides (B, 256, 1152) patch embeddings; the model owns
+only the linear projector + the 18L Gemma decoder.
+"""
+from repro.configs.base import FrontendConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257_216,
+    attn_pattern=("global",),
+    mlp_type="geglu",
+    norm_type="rms",
+    tie_embeddings=True,
+    embed_scale=True,
+    rope_theta=10_000.0,
+    decode_window=8192,     # sub-quadratic long_500k variant (sliding window)
+    frontend=FrontendConfig(kind="vision", embed_dim=1152, num_prefix_tokens=256),
+    source="arXiv:2407.07726 (SigLIP + Gemma)",
+)
+
+SMOKE = CONFIG.replace(num_layers=2, d_model=128, num_heads=4, num_kv_heads=1,
+                       head_dim=32, d_ff=256, vocab_size=512,
+                       frontend=FrontendConfig(kind="vision", embed_dim=64,
+                                               num_prefix_tokens=8),
+                       param_dtype="float32", compute_dtype="float32")

@@ -1,0 +1,34 @@
+"""RecurrentGemma-2B [arXiv:2402.19427] — Griffin: RG-LRU + local attention 1:2.
+
+26 layers with repeating (rec, rec, attn) pattern: 8 scanned units + a
+(rec, rec) suffix. Local attention window 2048.
+"""
+from repro.configs.base import ModelConfig, RGLRUConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256_000,
+    block_pattern=("rec", "rec", "attn"),
+    attn_pattern=("local",),
+    window=2048,
+    mlp_type="geglu",
+    norm_type="rms",
+    tie_embeddings=True,
+    embed_scale=True,
+    rope_theta=10_000.0,
+    decode_window=None,     # local attn + recurrence already sub-quadratic
+    rglru=RGLRUConfig(lru_width=2560, conv_width=4, c_const=8.0),
+    source="arXiv:2402.19427 (Griffin / RecurrentGemma)",
+)
+
+SMOKE = CONFIG.replace(num_layers=5, d_model=128, num_heads=4, num_kv_heads=1,
+                       head_dim=32, d_ff=256, vocab_size=512, window=32,
+                       rglru=RGLRUConfig(lru_width=128, conv_width=4),
+                       param_dtype="float32", compute_dtype="float32")

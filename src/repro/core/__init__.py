@@ -1,0 +1,16 @@
+"""CAFL-L: the paper's primary contribution — constraint-aware federated
+learning with Lagrangian dual optimization (duals, policy, resource
+proxies, token-budget preservation, compression, freezing, client/server).
+"""
+from repro.core.duals import (  # noqa: F401
+    RESOURCES, DualState, deadzone, dual_update, lagrangian_value,
+    usage_ratios,
+)
+from repro.core.policy import (  # noqa: F401
+    Knobs, fedavg_knobs, policy, token_budget_accum,
+)
+from repro.core.resources import (  # noqa: F401
+    BYTES_PER_PARAM, TABLE1_FEDAVG, ResourceModel, calibrate,
+)
+from repro.core.server import FLResult, RoundRecord, run_federated  # noqa: F401
+from repro.core.client import ClientRunner  # noqa: F401

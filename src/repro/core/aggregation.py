@@ -1,0 +1,36 @@
+"""Server-side aggregation (Algorithm 1, line 15).
+
+The paper aggregates the *participating* clients' deltas with a plain
+mean: w <- w + (1/|S_t|) sum_i dw_i. ``weighted=True`` gives the
+|D_i|-weighted FedAvg variant (Eq. 1) for ablations.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def aggregate(deltas: Sequence, weights: Optional[List[float]] = None):
+    n = len(deltas)
+    assert n > 0
+    if weights is None:
+        w = [1.0 / n] * n
+    else:
+        tot = sum(weights)
+        w = [x / tot for x in weights]
+
+    def combine(*leaves):
+        acc = leaves[0].astype(jnp.float32) * w[0]
+        for wi, leaf in zip(w[1:], leaves[1:]):
+            acc = acc + leaf.astype(jnp.float32) * wi
+        return acc
+
+    return jax.tree.map(combine, *deltas)
+
+
+def apply_delta(params, delta):
+    return jax.tree.map(lambda p, d: (p.astype(jnp.float32)
+                                      + d.astype(jnp.float32)).astype(p.dtype),
+                        params, delta)

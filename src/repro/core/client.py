@@ -1,0 +1,127 @@
+"""Client-side LocalTrain (Algorithm 1, lines 10-11).
+
+Runs ``s`` optimizer steps, each accumulating gradients over
+``grad_accum`` microbatches of size ``b`` (token-budget preservation,
+Eq. 8), with the bottom layers frozen per ``k`` (gradient mask) and the
+resulting update quantized to level ``q`` for the wire.
+
+Returns (delta_tree, usage, metrics) where usage is the paper's A.1
+proxy evaluated at the executed knobs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import compression, freezing
+from repro.core.policy import Knobs
+from repro.core.resources import ResourceModel
+from repro.data.federated import FederatedData
+from repro.models.zoo import Model
+from repro.optim import make_optimizer
+
+
+class ClientRunner:
+    """Owns the jitted train-step cache shared by all simulated clients."""
+
+    def __init__(self, model: Model, fl: FLConfig, data: FederatedData,
+                 resources: ResourceModel):
+        self.model = model
+        self.fl = fl
+        self.data = data
+        self.resources = resources
+        self.opt = make_optimizer(fl.optimizer, fl.lr, fl.weight_decay)
+        self._grad_fns = {}
+        self._masks = {}          # k -> mask tree
+        self._active = {}         # k -> active param count
+
+        @jax.jit
+        def _apply(params, opt_state, grads, mask):
+            grads = freezing.apply_mask(grads, mask)
+            updates, opt_state = self.opt.update(grads, opt_state, params)
+            updates = freezing.apply_mask(updates, mask)
+            new_params = jax.tree.map(
+                lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)
+                              ).astype(p.dtype), params, updates)
+            return new_params, opt_state
+
+        self._apply = _apply
+
+    def _grad_fn(self, b: int):
+        if b not in self._grad_fns:
+            loss_fn = self.model.train_loss
+
+            @jax.jit
+            def gf(params, batch):
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, batch)
+                return loss, grads
+
+            self._grad_fns[b] = gf
+        return self._grad_fns[b]
+
+    def mask_for(self, params, k: int):
+        if k not in self._masks:
+            self._masks[k] = freezing.mask_tree(params, self.model.cfg, k)
+            self._active[k] = freezing.count_active(params, self._masks[k])
+        return self._masks[k], self._active[k]
+
+    def local_train(self, client_id: int, params, knobs: Knobs
+                    ) -> Tuple[dict, Dict[str, float], Dict[str, float]]:
+        fl = self.fl
+        mask, active = self.mask_for(params, knobs.k)
+        grad_fn = self._grad_fn(knobs.b)
+        opt_state = self.opt.init(params)
+        w = params
+        losses = []
+        for _ in range(knobs.s):
+            grads_sum = None
+            for _ in range(knobs.grad_accum):
+                batch = self.data.batch(client_id, knobs.b, fl.seq_len)
+                batch = {k2: jnp.asarray(v) for k2, v in batch.items()}
+                loss, grads = grad_fn(w, batch)
+                losses.append(float(loss))
+                if grads_sum is None:
+                    grads_sum = grads
+                else:
+                    grads_sum = jax.tree.map(lambda a, g: a + g, grads_sum, grads)
+            if knobs.grad_accum > 1:
+                grads_sum = jax.tree.map(lambda g: g / knobs.grad_accum,
+                                         grads_sum)
+            w, opt_state = self._apply(w, opt_state, grads_sum, mask)
+
+        delta = jax.tree.map(lambda a, b_: a.astype(jnp.float32)
+                             - b_.astype(jnp.float32), w, params)
+        # wire compression (q knob) — quantize the update, server gets the
+        # dequantized tree; masked (frozen) leaves are exact zeros either way
+        delta = compression.compress_decompress(delta, knobs.q)
+        delta = freezing.apply_mask(delta, mask)
+
+        usage = self.resources.usage(active, knobs)
+        usage_true = self.resources.usage(active, knobs, include_accum=True)
+        metrics = {
+            "train_loss": float(np.mean(losses)),
+            "params_active": active,
+            "wire_mb_actual": _masked_wire_mb(delta, mask, knobs.q),
+            "energy_true": usage_true["energy"],
+            "temp_true": usage_true["temp"],
+        }
+        return delta, usage, metrics
+
+
+def _masked_wire_mb(delta, mask, q: int) -> float:
+    """Actual bytes: only trainable leaves ship."""
+    total = 0.0
+    for leaf, m in zip(jax.tree.leaves(delta), jax.tree.leaves(mask)):
+        m_arr = np.asarray(m)
+        frac = float(np.mean(m_arr)) if m_arr.ndim else float(m_arr)
+        n = frac * np.prod(leaf.shape)
+        total += n * compression.BYTES_PER_PARAM[q]
+        if q > 0:
+            total += 4.0 * (n / 256.0)
+    return total / 1e6

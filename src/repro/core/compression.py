@@ -1,0 +1,59 @@
+"""Update compression for the communication knob ``q``.
+
+q=0: fp32 (4 B/param) — no-op.
+q=1: blockwise int8 absmax quantization (1 B/param + fp32 scale / block).
+q=2: blockwise 2-bit quantization (0.25 B/param + fp32 scale / block).
+
+The FL loop calls ``compress_decompress`` (the server immediately
+dequantizes, so we model the *wire* format and keep the math in fp32).
+On TPU the quantizer is the Pallas kernel in ``repro.kernels.quantize``;
+on CPU (this container, and inside the FL simulation loop) the pure-jnp
+reference path is used — ``repro.kernels.ops`` picks the backend.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+from repro.core.resources import BYTES_PER_PARAM
+
+
+def compress_decompress(tree: Any, q: int, block: int = 256) -> Any:
+    if q == 0:
+        return tree
+    from repro.kernels import ops
+    bits = 8 if q == 1 else 2
+    return jax.tree.map(lambda l: ops.quantize_dequantize(l, bits=bits,
+                                                          block=block), tree)
+
+
+def wire_bytes(tree: Any, q: int, block: int = 256) -> float:
+    """Actual bytes on the wire, including per-block scales."""
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+    payload = n * BYTES_PER_PARAM[q]
+    if q == 0:
+        return payload
+    n_blocks = sum(-(-int(np.prod(l.shape)) // block)
+                   for l in jax.tree.leaves(tree))
+    return payload + 4.0 * n_blocks
+
+
+def wire_mb(tree: Any, q: int, block: int = 256) -> float:
+    return wire_bytes(tree, q, block) / 1e6
+
+
+def compression_error(tree: Any, q: int, block: int = 256) -> Dict[str, float]:
+    """Relative L2 error introduced by the wire format (diagnostics)."""
+    if q == 0:
+        return {"rel_l2": 0.0}
+    deq = compress_decompress(tree, q, block)
+    num = 0.0
+    den = 0.0
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(deq)):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        num += float(np.sum((a - b) ** 2))
+        den += float(np.sum(a ** 2))
+    return {"rel_l2": float(np.sqrt(num / max(den, 1e-30)))}

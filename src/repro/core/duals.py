@@ -1,0 +1,60 @@
+"""Lagrangian dual variables and their dead-zone update (paper Eq. 3-4).
+
+    L(w, lambda) = F(w) + sum_j lambda_j * max(0, u_j - b_j)
+    lambda_j <- max(0, lambda_j + eta * dz(u_j / b_j))
+
+The dead-zone dz(.) returns 0 inside [1 - delta, 1 + delta] and the signed
+excess (u/b - 1) outside — the stability device the paper uses so duals do
+not chatter when usage hovers at the budget.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.configs.base import Budgets, DualConfig
+
+RESOURCES = ("energy", "comm", "memory", "temp")
+
+
+@dataclass
+class DualState:
+    lam: Dict[str, float] = field(
+        default_factory=lambda: {r: 0.0 for r in RESOURCES})
+
+    def as_tuple(self):
+        return tuple(self.lam[r] for r in RESOURCES)
+
+
+def deadzone(ratio: float, delta: float) -> float:
+    """dz(u/b): signed excess outside the +-delta band around 1."""
+    x = ratio - 1.0
+    if abs(x) <= delta:
+        return 0.0
+    return x
+
+
+def usage_ratios(usage: Dict[str, float], budgets: Budgets) -> Dict[str, float]:
+    b = {"energy": budgets.energy, "comm": budgets.comm_mb,
+         "memory": budgets.memory, "temp": budgets.temp}
+    return {r: usage[r] / b[r] for r in RESOURCES}
+
+
+def dual_update(state: DualState, usage: Dict[str, float], budgets: Budgets,
+                cfg: DualConfig) -> DualState:
+    """One server-side dual ascent step (Algorithm 1, line 17)."""
+    ratios = usage_ratios(usage, budgets)
+    new = {}
+    for r in RESOURCES:
+        lam = state.lam[r] + cfg.eta * deadzone(ratios[r], cfg.deadzone)
+        new[r] = float(min(max(lam, 0.0), cfg.lambda_max))
+    return DualState(lam=new)
+
+
+def lagrangian_value(loss: float, usage: Dict[str, float], budgets: Budgets,
+                     state: DualState) -> float:
+    """Eq. 3 evaluated at (w, lambda) — used for logging/monitoring."""
+    b = {"energy": budgets.energy, "comm": budgets.comm_mb,
+         "memory": budgets.memory, "temp": budgets.temp}
+    penalty = sum(state.lam[r] * max(0.0, usage[r] - b[r]) for r in RESOURCES)
+    return loss + penalty

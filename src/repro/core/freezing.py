@@ -1,0 +1,105 @@
+"""Freezing-depth (the policy's ``k`` knob) as a parameter mask tree.
+
+``k`` = number of *top* (closest-to-head) unfrozen transformer layers.
+Frozen layers carry no gradients, no optimizer movement, and are excluded
+from ``params_active`` — which is what the paper's E/C/M proxies charge
+for. The mask is a pytree of 0/1 floats shaped to broadcast against each
+leaf; for scan-stacked unit params the mask is per-unit along axis 0, so a
+single compiled step serves every value of k.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import stack_plan
+
+
+def _layer_bounds(cfg: ModelConfig):
+    prefix, unit, n_units, suffix = stack_plan(cfg)
+    return len(prefix), len(unit), n_units, len(suffix)
+
+
+def mask_tree(params: Any, cfg: ModelConfig, k: int) -> Any:
+    """1.0 = trainable, 0.0 = frozen. Top-k layers + head/final norm are
+    trainable; embeddings freeze whenever any layer is frozen."""
+    n_prefix, unit_len, n_units, n_suffix = _layer_bounds(cfg)
+    total = cfg.num_layers
+    k = max(1, min(k, total))
+    first_unfrozen = total - k          # layer index of first trainable layer
+
+    def ones_like(t):
+        return jax.tree.map(lambda l: jnp.ones((), jnp.float32), t)
+
+    def zeros_like(t):
+        return jax.tree.map(lambda l: jnp.zeros((), jnp.float32), t)
+
+    mask = {}
+    stack = params["stack"] if "stack" in params else None
+    if stack is not None:
+        smask = {}
+        if "prefix" in stack:
+            smask["prefix"] = [
+                ones_like(p) if i >= first_unfrozen else zeros_like(p)
+                for i, p in enumerate(stack["prefix"])]
+        if "units" in stack:
+            unit_first_layer = np.arange(n_units) * unit_len + n_prefix
+            # a unit is trainable iff its *last* layer is unfrozen; partial
+            # units round down (freeze) to keep one executable per k.
+            unit_last_layer = unit_first_layer + unit_len - 1
+            unit_trainable = (unit_last_layer >= first_unfrozen).astype(np.float32)
+            vec = jnp.asarray(unit_trainable)
+
+            def unit_mask(leaf):
+                shape = (n_units,) + (1,) * (leaf.ndim - 1)
+                return vec.reshape(shape)
+
+            smask["units"] = jax.tree.map(unit_mask, stack["units"])
+        if "suffix" in stack:
+            base = n_prefix + unit_len * n_units
+            smask["suffix"] = [
+                ones_like(p) if base + i >= first_unfrozen else zeros_like(p)
+                for i, p in enumerate(stack["suffix"])]
+        mask["stack"] = smask
+    if "io" in params:
+        io = params["io"]
+        full = (k >= total)
+        iomask = {}
+        for key in io:
+            if key in ("embed", "pos_embed", "frontend_proj"):
+                iomask[key] = jax.tree.map(
+                    lambda l: jnp.asarray(1.0 if full else 0.0, jnp.float32),
+                    io[key])
+            else:                        # head, final_norm: always trainable
+                iomask[key] = ones_like(io[key])
+        mask["io"] = iomask
+    for key in params:
+        if key not in mask:              # enc/dec stacks etc.
+            mask[key] = ones_like(params[key])
+    return mask
+
+
+def apply_mask(tree: Any, mask: Any) -> Any:
+    return jax.tree.map(lambda t, m: t * m.astype(t.dtype), tree, mask)
+
+
+def count_params(params: Any) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+def count_active(params: Any, mask: Any) -> float:
+    """Masked parameter count (params the round actually trains/ships)."""
+    total = 0.0
+    for leaf, m in zip(jax.tree.leaves(params), jax.tree.leaves(mask)):
+        m_arr = np.asarray(m)
+        size = np.prod(leaf.shape)
+        if m_arr.ndim == 0:
+            total += float(m_arr) * size
+        else:
+            frac = float(np.mean(m_arr))
+            total += frac * size
+    return total

@@ -1,0 +1,3 @@
+from repro.data.shakespeare import CharDataset, load_corpus, sample_batch  # noqa: F401
+from repro.data.federated import FederatedData  # noqa: F401
+from repro.data.synthetic import synthetic_batch  # noqa: F401

@@ -1,0 +1,92 @@
+"""jit'd public wrappers around the Pallas kernels, with backend dispatch.
+
+On TPU the compiled kernels run; on CPU (this container) the same kernel
+bodies execute in interpret mode for validation, and the hot paths used
+inside the FL simulation loop fall back to the pure-jnp reference (which
+XLA fuses well on CPU). ``FORCE_BACKEND`` lets tests pin either path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import quantize as qk
+from repro.kernels import flash_attention as fak
+
+FORCE_BACKEND: Optional[str] = None   # None | "pallas" | "ref"
+
+
+def _use_pallas() -> bool:
+    if FORCE_BACKEND == "pallas":
+        return True
+    if FORCE_BACKEND == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block"))
+def _qdq_ref(x, bits: int, block: int):
+    return ref.quantize_dequantize_ref(x, bits, block)
+
+
+def quantize_dequantize(x, *, bits: int, block: int = 256):
+    """Wire round-trip (quantize then dequantize), any shape."""
+    if not _use_pallas():
+        return _qdq_ref(x, bits, block)
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % (block * qk.ROWS_PER_TILE)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    interp = jax.default_backend() != "tpu"
+    codes, scales = qk.quantize_blocks(blocks, bits, interpret=interp)
+    deq = qk.dequantize_blocks(codes, scales, interpret=interp)
+    return deq.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def quantize_wire(x, *, bits: int, block: int = 256):
+    """-> (codes int8 (n_blocks, block), scales f32 (n_blocks,), n_valid)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % (block * qk.ROWS_PER_TILE)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    if _use_pallas():
+        interp = jax.default_backend() != "tpu"
+        codes, scales = qk.quantize_blocks(blocks, bits, interpret=interp)
+    else:
+        codes, scales = ref.quantize_blocks_ref(blocks, bits)
+    return codes, scales, n
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None):
+    """Model layout (B, S, H, D); dispatches Pallas (TPU) vs reference."""
+    if not _use_pallas():
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       softcap=softcap, scale=scale)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    interp = jax.default_backend() != "tpu"
+    out = fak.flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                   softcap=softcap, scale=scale,
+                                   interpret=interp)
+    return out.transpose(0, 2, 1, 3)

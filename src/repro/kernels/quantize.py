@@ -1,0 +1,73 @@
+"""Pallas-TPU blockwise quantization kernel — the CAFL-L communication
+hot spot (every round quantizes the full update tree at q>0).
+
+Wire format: 1-D blocks of ``block`` values; per-block fp32 absmax scale;
+mid-rise codes (see kernels/ref.py). Tiling: ROWS_PER_TILE blocks x block
+values per kernel invocation — (8, 256) fp32 = 8 KiB in VMEM, lane-dim
+256 is a multiple of 128 so loads/stores are register-aligned; the
+reduction (absmax) runs along the minor axis on the VPU.
+
+Validated against ref.quantize_blocks_ref in interpret mode on CPU
+(tests/test_kernels_quantize.py); on TPU the same kernel runs compiled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS_PER_TILE = 8
+
+
+def _quantize_kernel(x_ref, codes_ref, scales_ref, *, bits: int):
+    x = x_ref[...].astype(jnp.float32)                    # (ROWS, block)
+    L = 2 ** (bits - 1)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)   # (ROWS, 1)
+    scale = absmax / L
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(jnp.floor(x / safe), -L, L - 1)
+    codes_ref[...] = codes.astype(jnp.int8)
+    scales_ref[...] = scale[:, 0]
+
+
+def _dequantize_kernel(codes_ref, scales_ref, out_ref):
+    codes = codes_ref[...].astype(jnp.float32)
+    scale = scales_ref[...][:, None]
+    out = (codes + 0.5) * scale
+    out_ref[...] = jnp.where(scale > 0, out, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_blocks(x2d, bits: int, interpret: bool = True):
+    """x2d: (n_blocks, block) -> (codes int8, scales f32)."""
+    n, block = x2d.shape
+    assert n % ROWS_PER_TILE == 0, "pad n_blocks to ROWS_PER_TILE"
+    grid = (n // ROWS_PER_TILE,)
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS_PER_TILE, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((ROWS_PER_TILE, block), lambda i: (i, 0)),
+                   pl.BlockSpec((ROWS_PER_TILE,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n, block), jnp.int8),
+                   jax.ShapeDtypeStruct((n,), jnp.float32)],
+        interpret=interpret,
+    )(x2d)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize_blocks(codes, scales, interpret: bool = True):
+    n, block = codes.shape
+    assert n % ROWS_PER_TILE == 0
+    grid = (n // ROWS_PER_TILE,)
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS_PER_TILE, block), lambda i: (i, 0)),
+                  pl.BlockSpec((ROWS_PER_TILE,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((ROWS_PER_TILE, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, block), jnp.float32),
+        interpret=interpret,
+    )(codes, scales)

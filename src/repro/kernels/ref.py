@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# blockwise symmetric mid-rise quantization (the CAFL-L wire format)
+# ---------------------------------------------------------------------------
+
+
+def quantize_blocks_ref(x2d, bits: int):
+    """x2d: (n_blocks, block) fp -> (codes int8, scales fp32).
+
+    Mid-rise uniform quantizer: scale = absmax / L with L = 2^(bits-1);
+    code = clip(floor(x / scale), -L, L-1); dequant = (code + 0.5) * scale.
+    """
+    L = 2 ** (bits - 1)
+    absmax = jnp.max(jnp.abs(x2d.astype(jnp.float32)), axis=1, keepdims=True)
+    scale = absmax / L
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(jnp.floor(x2d.astype(jnp.float32) / safe), -L, L - 1)
+    return codes.astype(jnp.int8), scale[:, 0]
+
+
+def dequantize_blocks_ref(codes, scales):
+    return (codes.astype(jnp.float32) + 0.5) * scales[:, None]
+
+
+def quantize_dequantize_ref(x, bits: int, block: int = 256):
+    """Arbitrary-shape tensor -> wire round-trip, same shape/dtype."""
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    codes, scales = quantize_blocks_ref(blocks, bits)
+    deq = dequantize_blocks_ref(codes, scales)
+    # exact-zero blocks stay zero (scale==0)
+    deq = jnp.where(scales[:, None] > 0, deq, 0.0)
+    return deq.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal, optional window + softcap), fp32 math
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None,
+                        softcap=None, scale=None):
+    """q: (B,Sq,H,D), k/v: (B,Sk,KVH,D) -> (B,Sq,H,D). Naive O(S^2) oracle."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, kvh, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,blkd->bkgql", qg, kf) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgql,blkd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,272 @@
+"""ShapeDtypeStruct input specs and sharding recipes for every
+(architecture x input-shape x mesh) combination.
+
+The sharding recipe is Megatron-orientation tensor parallelism on the
+``model`` axis combined with FSDP-style parameter sharding on the
+``data`` axis (XLA/GSPMD inserts the gathers), expert parallelism for MoE
+(expert dim on ``model``), and batch data-parallel over (pod, data).
+``long_500k`` (batch=1) shards the KV-cache sequence dim over ``data``
+instead of the batch. The recipe lives in one table so §Perf iterations
+can swap rules per-name.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import batch_axes
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Batch specs for train/prefill; decode adds cache specs separately."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.encdec:
+        s_src, s_tgt = s // 2, s - s // 2
+        if shape.kind == "decode":
+            s_src = min(s_src, 4096)        # fixed encoder memory at decode
+        out["src_embeds"] = sds((b, s_src, cfg.frontend.embed_dim), jnp.float32)
+        out["tokens"] = sds((b, s_tgt), jnp.int32)
+        if shape.kind == "train":
+            out["targets"] = sds((b, s_tgt), jnp.int32)
+        return out
+    n_text = s
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        out["patch_embeds"] = sds((b, cfg.frontend.num_prefix_tokens,
+                                   cfg.frontend.embed_dim), jnp.float32)
+        n_text = s - cfg.frontend.num_prefix_tokens
+    out["tokens"] = sds((b, n_text), jnp.int32)
+    if shape.kind == "train":
+        out["targets"] = sds((b, n_text), jnp.int32)
+    return out
+
+
+def cache_specs(model, cfg: ModelConfig, shape: InputShape):
+    """Decode-cache ShapeDtypeStructs via eval_shape (no allocation)."""
+    long = shape.name == "long_500k"
+    if cfg.encdec:
+        return jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     long=long, src_len=4096))
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, long=long))
+
+
+# ---------------------------------------------------------------------------
+# sharding recipe
+# ---------------------------------------------------------------------------
+
+# name-pattern -> spec builder; first match wins. dp = data(+pod for params
+# we keep params on data only; batch uses pod too), mp = model.
+def _recipe(dp, mp):
+    return [
+        # --- MoE expert banks (E, in, out): expert-parallel on model ---
+        (r"ffn/(expert_gate|expert_up)$", P(mp, dp, None)),
+        (r"ffn/expert_down$", P(mp, None, dp)),
+        (r"ffn/router$", P(dp, None)),
+        # --- MLA ---
+        (r"attn/w_dq$", P(dp, mp)),
+        (r"attn/w_uq$", P(None, mp)),
+        (r"attn/w_dkv$", P(dp, None)),
+        (r"attn/w_uk$", P(None, mp)),
+        (r"attn/w_uv$", P(None, mp)),
+        (r"attn/w_kr$", P(dp, None)),
+        # --- attention (megatron orientation) ---
+        (r"(attn|self_attn|cross_attn)/w[qkv]$", P(dp, mp)),
+        (r"(attn|self_attn|cross_attn)/b[qkv]$", P(mp)),
+        (r"(attn|self_attn|cross_attn)/wo$", P(mp, dp)),
+        # --- dense MLP ---
+        (r"(ffn|shared)/(w_gate|w_up)$", P(dp, mp)),
+        (r"(ffn|shared)/b_up$", P(mp)),
+        (r"(ffn|shared)/w_down$", P(mp, dp)),
+        (r"(ffn|shared)/b_down$", P(dp)),
+        # --- xLSTM ---
+        (r"mlstm/w_up$", P(dp, mp)),
+        (r"mlstm/conv_w$", P(None, mp)),
+        (r"mlstm/w[qkv]$", P(dp, mp)),
+        (r"mlstm/w_[if]$", P(dp, None)),
+        (r"mlstm/(skip_scale|gn_scale)$", P(mp)),
+        (r"mlstm/w_down$", P(mp, dp)),
+        (r"slstm/w_in$", P(dp, mp)),
+        (r"slstm/b_in$", P(mp)),
+        (r"slstm/r_blocks$", P(None, None, None, None)),
+        (r"slstm/gn_scale$", P(None)),
+        (r"slstm/w_up$", P(dp, mp)),
+        (r"slstm/w_down$", P(mp, dp)),
+        # --- RG-LRU ---
+        (r"rec/(w_gate_branch|w_rec_branch)$", P(dp, mp)),
+        (r"rec/conv_w$", P(None, mp)),
+        (r"rec/w_[ri]$", P(dp, mp)),
+        (r"rec/lambda_raw$", P(mp)),
+        (r"rec/w_out$", P(mp, dp)),
+        # --- io ---
+        (r"io/embed$", P(mp, dp)),
+        (r"io/head$", P(dp, mp)),
+        (r"io/pos_embed$", P(None, None)),
+        (r"io/frontend_proj$", P(None, dp)),
+        # --- norms & everything 1-D: replicated ---
+        (r".*", None),
+    ]
+
+
+def _leaf_spec(path: str, shape, recipe, n_lead: int) -> P:
+    for pat, spec in recipe:
+        if re.search(pat, path):
+            if spec is None:
+                return P()
+            parts = list(spec) + [None] * max(0, len(shape) - n_lead - len(spec))
+            parts = parts[: len(shape) - n_lead]
+            return P(*([None] * n_lead + parts))
+    return P()
+
+
+def _tree_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _tree_paths(tree[k], f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _tree_paths(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def _divisible(dim: int, mesh, axis) -> bool:
+    if axis is None:
+        return True
+    names = axis if isinstance(axis, tuple) else (axis,)
+    n = 1
+    for name in names:
+        n *= mesh.shape[name]
+    return dim % n == 0
+
+
+RECIPES = {
+    # (dp_axis, mp_axis): Megatron-TP on `model` + FSDP on `data`
+    "default": ("data", "model"),
+    # serving: params replicated over data (no per-step FSDP gathers),
+    # TP over model — the beyond-paper decode optimization (§Perf)
+    "tp_serve": (None, "model"),
+    # pure ZeRO/FSDP over the combined (data, model) axes — no tensor
+    # parallelism; right for small-hidden recurrent archs (xLSTM) whose
+    # head counts cannot cover a 16-way model axis (§Perf)
+    "fsdp": (("data", "model"), None),
+}
+
+
+def param_shardings(mesh, params_shapes, cfg: ModelConfig,
+                    recipe_name: str = "default"):
+    """NamedSharding tree matching the shape tree. Dims that do not divide
+    their mesh axis fall back to replicated on that dim (e.g. seamless
+    vocab 256206 on a 16-way axis)."""
+    dp, mp = RECIPES[recipe_name]
+    recipe = _recipe(dp, mp)
+    flat = dict(_tree_paths(params_shapes))
+
+    def shard_one(path, leaf):
+        n_lead = 1 if "/units/" in path or path.endswith("units") or \
+            re.search(r"/(units|enc|dec)/", path) else 0
+        spec = _leaf_spec(path, leaf.shape, recipe, n_lead)
+        fixed = []
+        for dim, axis in zip(leaf.shape, tuple(spec) + (None,) * (len(leaf.shape) - len(spec))):
+            fixed.append(axis if _divisible(dim, mesh, axis) else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(tree[k], f"{prefix}/{k}") for k in tree}
+        if isinstance(tree, (list, tuple)):
+            vals = [walk(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+            return type(tree)(vals) if not isinstance(tree, tuple) else tuple(vals)
+        return shard_one(prefix, tree)
+
+    return walk(params_shapes)
+
+
+def batch_shardings(mesh, batch_specs, shape: InputShape):
+    """tokens/targets/embeds: batch over (pod, data); batch=1 -> replicated."""
+    bx = batch_axes(mesh)
+    b = shape.global_batch
+    ax = bx if _divisible(b, mesh, tuple(bx)) else (
+        ("data",) if _divisible(b, mesh, "data") else None)
+
+    def one(leaf):
+        spec = [ax] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_specs)
+
+
+def cache_shardings(mesh, cache_spec_tree, cfg: ModelConfig,
+                    shape: InputShape):
+    """KV caches: batch over (pod,data) when divisible; otherwise (long_500k,
+    batch=1) shard the sequence/buffer dim over data. Head dims shard over
+    model when divisible; recurrent states shard features over model."""
+    bx = batch_axes(mesh)
+    b = shape.global_batch
+    batch_ok = _divisible(b, mesh, tuple(bx))
+    data_ok = _divisible(b, mesh, "data")
+    b_ax = tuple(bx) if batch_ok else ("data" if data_ok else None)
+
+    def one(path, leaf):
+        n_lead = 1 if (re.search(r"/(units|self)/", path) or "/units" in path
+                       or re.search(r"/cross_[kv]", path)) else 0
+        dims = leaf.shape[n_lead:]
+        spec = [None] * n_lead
+        if len(dims) == 0:          # index scalar
+            return NamedSharding(mesh, P(*spec) if spec else P())
+        rest = [None] * len(dims)
+        rest[0] = b_ax
+        # (B, S, KVH, D) / (B, S, R): pick seq or head sharding
+        if len(dims) >= 2 and b_ax is None and dims[1] % mesh.shape["data"] == 0 \
+                and dims[1] > 1024:
+            rest[1] = "data"        # sequence-sharded cache (batch=1)
+        if len(dims) == 4 and _divisible(dims[2], mesh, "model"):
+            rest[2] = "model"       # kv heads cover the model axis
+        elif (len(dims) >= 3 and rest[1] is None and dims[1] >= 4096
+                and _divisible(dims[1], mesh, "model")):
+            # GQA kv-heads (8) cannot cover a 16-way model axis: shard the
+            # cache SEQUENCE over `model` instead (distributed-softmax
+            # decode). §Perf iteration: cache/device 16x down, kills the
+            # whole-cache reshard all-gathers.
+            rest[1] = "model"
+        # recurrent states (B, H, Dk, Dv) / (B, D): shard features on model
+        if re.search(r"/(C|n|h|c|m)$", path):
+            rest = [None] * len(dims)
+            rest[0] = b_ax
+            for i in range(len(dims) - 1, 0, -1):
+                if _divisible(dims[i], mesh, "model") and dims[i] >= 16:
+                    rest[i] = "model"
+                    break
+        spec = spec + rest
+        return NamedSharding(mesh, P(*spec))
+
+    flat = dict(_tree_paths(cache_spec_tree))
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(tree[k], f"{prefix}/{k}") for k in tree}
+        if isinstance(tree, (list, tuple)):
+            vals = [walk(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+            return type(tree)(vals) if not isinstance(tree, tuple) else tuple(vals)
+        return one(prefix, tree)
+
+    return walk(cache_spec_tree)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

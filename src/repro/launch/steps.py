@@ -1,0 +1,87 @@
+"""Step functions (train / prefill / decode) for the distributed runtime.
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+combination and the ones a real deployment would pjit. The CAFL-L layer
+sits above: a "client" in the production mapping is a mesh slice running
+``train_step`` with the policy's (k) freezing mask folded in as a traced
+mask tree (one executable for every k).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.zoo import Model
+from repro.optim import Optimizer, apply_updates, make_optimizer
+
+
+def make_train_step(model: Model, optimizer: Optimizer,
+                    with_freezing_mask: bool = False, microbatches: int = 1):
+    """(params, opt_state, batch[, mask]) -> (params, opt_state, loss).
+
+    ``microbatches > 1`` scans gradient accumulation over batch slices —
+    the paper's own token-budget mechanism (Eq. 8) doubling as the TPU
+    activation-memory lever: working set scales with B/microbatches while
+    tokens-per-step stay constant (§Perf pair 3).
+    """
+
+    def grads_of(params, batch):
+        (loss, _), grads = jax.value_and_grad(model.train_loss, has_aux=True)(
+            params, batch)
+        return loss, grads
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            return grads_of(params, batch)
+        split = jax.tree.map(
+            lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                + x.shape[1:]), batch)
+
+        def body(carry, mb):
+            loss_acc, gacc = carry
+            loss, grads = grads_of(params, mb)
+            gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                gacc, grads)
+            return (loss_acc + loss, gacc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (loss_sum, gsum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), split)
+        scale = 1.0 / microbatches
+        return loss_sum * scale, jax.tree.map(lambda g: g * scale, gsum)
+
+    def train_step(params, opt_state, batch, mask=None):
+        loss, grads = accumulate(params, batch)
+        if mask is not None:
+            grads = jax.tree.map(lambda g, m: g * m.astype(g.dtype), grads, mask)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        if mask is not None:
+            updates = jax.tree.map(lambda u, m: u * m.astype(u.dtype),
+                                   updates, mask)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    if not with_freezing_mask:
+        return lambda p, o, b: train_step(p, o, b, None)
+    return train_step
+
+
+def make_prefill_step(model: Model, shape: InputShape):
+    long = shape.name == "long_500k"
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, use_decode_window=long)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return decode_step

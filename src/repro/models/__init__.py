@@ -1,0 +1,1 @@
+from repro.models.zoo import Model, build  # noqa: F401

@@ -1,0 +1,190 @@
+"""Encoder-decoder backbone (SeamlessM4T-medium text/speech decoder stack).
+
+Per the assignment carve-out, the modality frontend (mel-spectrogram +
+conv feature extractor) is a stub — ``src_embeds`` arrive as precomputed
+frame embeddings of width ``cfg.frontend.embed_dim`` and are linearly
+projected into the encoder. The transformer backbone (12L encoder +
+12L decoder, d=1024, 16H, d_ff=4096) is fully implemented.
+
+Decoder layers = self-attn (causal, cached) + cross-attn (encoder memory,
+K/V precomputed once at prefill) + FFN. Both stacks scan over layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import zoo as Z
+
+
+def _enc_layer_init(rng, cfg: ModelConfig):
+    r = jax.random.split(rng, 2)
+    return {"ln1": L.norm_init(cfg), "attn": L.attn_init(r[0], cfg),
+            "ln2": L.norm_init(cfg), "ffn": L.mlp_init(r[1], cfg)}
+
+
+def _dec_layer_init(rng, cfg: ModelConfig):
+    r = jax.random.split(rng, 3)
+    return {"ln1": L.norm_init(cfg), "self_attn": L.attn_init(r[0], cfg),
+            "ln_x": L.norm_init(cfg), "cross_attn": L.attn_init(r[1], cfg),
+            "ln2": L.norm_init(cfg), "ffn": L.mlp_init(r[2], cfg)}
+
+
+def _enc_layer(p, x, cfg):
+    h = L.norm_apply(p["ln1"], x, cfg)
+    q, k, v = L._qkv(p["attn"], h, cfg)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    q = L.rope(q, pos, cfg.rope_theta)
+    k = L.rope(k, pos, cfg.rope_theta)
+    b, s, _ = x.shape
+    a = L.bidir_attention(q, k, v).reshape(b, s, -1) @ p["attn"]["wo"]
+    x = x + a
+    h = L.norm_apply(p["ln2"], x, cfg)
+    return x + L.mlp_apply(p["ffn"], h, cfg)
+
+
+def _cross_kv(p, memory, cfg):
+    b, s, _ = memory.shape
+    k = (memory @ p["cross_attn"]["wk"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = (memory @ p["cross_attn"]["wv"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def _cross_attend(p, x, k_enc, v_enc, cfg):
+    b, s, _ = x.shape
+    q = (x @ p["cross_attn"]["wq"]).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    out = L.bidir_attention(q, k_enc, v_enc)
+    return out.reshape(b, s, -1) @ p["cross_attn"]["wo"]
+
+
+def _dec_layer_full(p, x, positions, k_enc, v_enc, cfg, want_cache):
+    h = L.norm_apply(p["ln1"], x, cfg)
+    tmp_cfg = cfg
+    a, (k, v) = L.attn_apply_full(p["self_attn"], h, positions, tmp_cfg, window=None)
+    x = x + a
+    h = L.norm_apply(p["ln_x"], x, cfg)
+    x = x + _cross_attend(p, h, k_enc, v_enc, cfg)
+    h = L.norm_apply(p["ln2"], x, cfg)
+    x = x + L.mlp_apply(p["ffn"], h, cfg)
+    return x, ({"k": k, "v": v} if want_cache else None)
+
+
+def _dec_layer_decode(p, x, cache, k_enc, v_enc, cfg):
+    h = L.norm_apply(p["ln1"], x, cfg)
+    a, cache = L.attn_apply_decode(p["self_attn"], h, cache, cfg, window=None)
+    x = x + a
+    h = L.norm_apply(p["ln_x"], x, cfg)
+    x = x + _cross_attend(p, h, k_enc, v_enc, cfg)
+    h = L.norm_apply(p["ln2"], x, cfg)
+    return x + L.mlp_apply(p["ffn"], h, cfg), cache
+
+
+def encdec_model(cfg: ModelConfig) -> Z.Model:
+    n_enc = cfg.enc_layers
+    n_dec = cfg.num_layers
+
+    def init(rng):
+        r = jax.random.split(rng, 3)
+        enc = jax.vmap(lambda k: _enc_layer_init(k, cfg))(
+            jax.random.split(r[0], n_enc))
+        dec = jax.vmap(lambda k: _dec_layer_init(k, cfg))(
+            jax.random.split(r[1], n_dec))
+        io = Z.io_init(r[2], cfg)
+        io["enc_norm"] = L.norm_init(cfg)
+        return {"io": io, "enc": enc, "dec": dec}
+
+    def encode(params, src_embeds):
+        x = (src_embeds.astype(cfg.compute_dtype)
+             @ params["io"]["frontend_proj"])
+        x = L.shard_batch(x)
+
+        def body(h, layer_params):
+            return _enc_layer(layer_params, h, cfg), None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc"])
+        return L.norm_apply(params["io"]["enc_norm"], x, cfg)
+
+    def _dec_forward(params, memory, tokens, want_cache):
+        x = L.shard_batch(Z.embed_tokens(params["io"], tokens, cfg))
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def body(carry, layer_params):
+            h = carry
+            k_enc, v_enc = _cross_kv(layer_params, memory, cfg)
+            h, c = _dec_layer_full(layer_params, h, positions, k_enc, v_enc,
+                                   cfg, want_cache)
+            return h, c
+
+        body_fn = body if want_cache else jax.checkpoint(body)
+        x, caches = jax.lax.scan(body_fn, x, params["dec"])
+        x = L.norm_apply(params["io"]["final_norm"], x, cfg)
+        return x, caches
+
+    def train_loss(params, batch):
+        memory = encode(params, batch["src_embeds"])
+        x, _ = _dec_forward(params, memory, batch["tokens"], want_cache=False)
+        targets = batch["targets"]
+        mask = batch.get("loss_mask", jnp.ones(targets.shape, jnp.float32))
+        w = Z.unembed_matrix(params["io"], cfg).astype(cfg.compute_dtype)
+        ce = Z.chunked_ce_loss(x, w, targets, mask, cfg.final_softcap)
+        return ce, {"ce": ce, "aux": 0.0}
+
+    def prefill(params, batch, use_decode_window: bool = False,
+                max_new_tokens: int = 0):
+        memory = encode(params, batch["src_embeds"])
+        ctx_len = batch["tokens"].shape[1]
+        x, self_caches = _dec_forward(params, memory, batch["tokens"],
+                                      want_cache=True)
+        logits = Z.logits_fn(params["io"], x[:, -1:], cfg)
+        s_buf = ctx_len + max_new_tokens
+        if use_decode_window and cfg.decode_window:
+            s_buf = min(s_buf, cfg.decode_window)
+        # precompute cross-attention K/V once: recomputing them from the
+        # encoder memory every decode step cost useful-ratio 0.01 on the
+        # dry-run (EXPERIMENTS.md §Roofline notes)
+        cross_k, cross_v = jax.vmap(
+            lambda lp: _cross_kv(lp, memory, cfg))(params["dec"])
+        caches = {"self": jax.vmap(lambda c: L.attn_cache_from_full(
+            c["k"], c["v"], s_buf))(self_caches),
+            "cross_k": cross_k, "cross_v": cross_v}
+        return logits, caches
+
+    def decode_step(params, caches, tokens):
+        x = L.shard_batch(Z.embed_tokens(params["io"], tokens, cfg))
+
+        def body(h, xs):
+            layer_params, cache, k_enc, v_enc = xs
+            h, cache = _dec_layer_decode(layer_params, h, cache, k_enc, v_enc, cfg)
+            return h, cache
+
+        x, self_caches = jax.lax.scan(
+            body, x, (params["dec"], caches["self"],
+                      caches["cross_k"], caches["cross_v"]))
+        x = L.norm_apply(params["io"]["final_norm"], x, cfg)
+        logits = Z.logits_fn(params["io"], x, cfg)
+        return logits, {"self": self_caches, "cross_k": caches["cross_k"],
+                        "cross_v": caches["cross_v"]}
+
+    def init_cache(batch_size, ctx_len, long: bool = False, src_len: int = 4096):
+        s_buf = ctx_len
+        if long and cfg.decode_window:
+            s_buf = min(s_buf, cfg.decode_window)
+        per_layer = L.attn_cache_init(cfg, batch_size, s_buf)
+        caches = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_dec,) + a.shape).copy(),
+            per_layer)
+        cross = jnp.zeros((n_dec, batch_size, src_len, cfg.num_kv_heads,
+                           cfg.head_dim), cfg.compute_dtype)
+        return {"self": caches, "cross_k": cross, "cross_v": cross}
+
+    def param_count():
+        import math
+        params = jax.eval_shape(init, jax.random.PRNGKey(0))
+        total = sum(math.prod(l.shape) for l in jax.tree.leaves(params))
+        return {"total": total, "active": total}
+
+    return Z.Model(cfg, init, train_loss, prefill, decode_step, init_cache,
+                   param_count)

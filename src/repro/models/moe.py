@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer (GShard/Switch-style einsum dispatch).
+
+Design notes for the TPU mapping:
+* tokens are grouped (``group_size`` per group, group axis sharded over the
+  ``data`` mesh axis) and dispatched to a per-group capacity buffer with a
+  one-hot einsum — this is the classic GSPMD-friendly MoE formulation whose
+  dispatch/combine einsums lower to all-to-alls when experts are sharded on
+  the ``model`` axis;
+* expert FFNs run as a single batched einsum over the expert axis
+  (expert-parallel);
+* the dispatch-einsum FLOP overhead scales with capacity-per-group, so
+  ``group_size`` is kept small (2048) — see EXPERIMENTS.md §Perf where the
+  sort-based alternative is evaluated as a beyond-paper optimization.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, mlp_init, mlp_apply
+
+
+def moe_init(rng, cfg: ModelConfig):
+    m = cfg.moe
+    r = jax.random.split(rng, 5)
+    e, dm, dff = m.num_experts, cfg.d_model, m.d_ff_expert
+    scale = 1.0 / math.sqrt(dm)
+    p = {
+        "router": dense_init(r[0], dm, e, jnp.float32, scale=scale),
+        "expert_gate": (jax.random.normal(r[1], (e, dm, dff), jnp.float32) * scale
+                   ).astype(cfg.param_dtype),
+        "expert_up": (jax.random.normal(r[2], (e, dm, dff), jnp.float32) * scale
+                 ).astype(cfg.param_dtype),
+        "expert_down": (jax.random.normal(r[3], (e, dff, dm), jnp.float32)
+                   * (1.0 / math.sqrt(dff))).astype(cfg.param_dtype),
+    }
+    if m.num_shared_experts:
+        p["shared"] = mlp_init(r[4], cfg, d_ff=m.d_ff_dense or m.d_ff_expert)
+    return p
+
+
+def _capacity(m, tokens_per_group: int) -> int:
+    c = int(math.ceil(tokens_per_group * m.top_k * m.capacity_factor / m.num_experts))
+    return max(4, c)
+
+
+def moe_apply(p, x, cfg: ModelConfig, *, rng: Optional[jax.Array] = None):
+    """x: (B, S, D) -> (B, S, D), aux_loss (load-balance)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    n_tok = b * s
+    gs = min(m.group_size, n_tok)
+    # pad so groups divide evenly
+    n_grp = (n_tok + gs - 1) // gs
+    pad = n_grp * gs - n_tok
+    xf = x.reshape(n_tok, d)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    xg = xf.reshape(n_grp, gs, d)
+
+    logits = (xg @ p["router"].astype(xg.dtype)).astype(jnp.float32)  # (G,S,E)
+    if m.router_noise and rng is not None:
+        logits += m.router_noise * jax.random.normal(rng, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)             # (G,S,K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    cap = _capacity(m, gs)
+    e = m.num_experts
+    # position of each (token, k) within its expert queue — int8 one-hot /
+    # int16 cumsum: these (Ntok, K, E) tensors dominate MoE HBM traffic at
+    # E=256 (measured ~45% of deepseek train bytes, §Perf), and gs*K<=2^15
+    # always fits int16
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int8)            # (G,S,K,E)
+    flat = onehot.reshape(n_grp, gs * m.top_k, e)
+    pos = jnp.cumsum(flat.astype(jnp.int16), axis=1) * flat - 1       # (G,S*K,E)
+    pos = pos.reshape(n_grp, gs, m.top_k, e)
+    in_cap = (pos >= 0) & (pos < cap)
+    # combine tensor (G,S,K,E,C) -> summed over K into (G,S,E,C)
+    pos_oh = jax.nn.one_hot(jnp.where(in_cap, pos, -1), cap, dtype=xg.dtype)
+    combine = jnp.einsum("gske,gskec->gsec",
+                         (gate_vals[..., None] * onehot).astype(xg.dtype) *
+                         in_cap.astype(xg.dtype), pos_oh)
+    dispatch = (combine > 0).astype(xg.dtype)                         # (G,S,E,C)
+
+    # dispatch -> (E, G, C, D)
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+    h = jnp.einsum("egcd,edf->egcf", xe, p["expert_gate"].astype(xe.dtype))
+    u = jnp.einsum("egcd,edf->egcf", xe, p["expert_up"].astype(xe.dtype))
+    h = jax.nn.silu(h) * u
+    ye = jnp.einsum("egcf,efd->egcd", h, p["expert_down"].astype(h.dtype))
+    y = jnp.einsum("gsec,egcd->gsd", combine, ye)                     # (G,S,D)
+
+    y = y.reshape(n_grp * gs, d)[:n_tok].reshape(b, s, d)
+    if m.num_shared_experts:
+        y = y + mlp_apply(p["shared"], x, cfg)
+
+    # Switch-style load-balance aux loss
+    density = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32),
+                       axis=1)                                        # (G,E)
+    density_proxy = jnp.mean(probs, axis=1)                           # (G,E)
+    aux = jnp.mean(density * density_proxy) * (e ** 2) * m.aux_loss_weight
+    return y, aux
+
+
+def moe_param_count(cfg: ModelConfig) -> dict:
+    """Total vs active parameter counts for the resource proxies."""
+    m = cfg.moe
+    d, dff, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    per_expert = 3 * d * dff
+    total = e * per_expert + d * e
+    active = m.top_k * per_expert + d * e
+    if m.num_shared_experts:
+        shared = 3 * d * (m.d_ff_dense or dff)
+        total += shared
+        active += shared
+    return {"total": total, "active": active}

@@ -1,0 +1,99 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    r_t = sigmoid(W_r x_t),  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the sequence (the
+TPU-native way to parallelize a linear recurrence); decode is a single
+fused step. Block layout follows Griffin's recurrent block: two branches
+(gate branch with SiLU; recurrence branch with causal conv4 + RG-LRU),
+merged multiplicatively and projected out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.ssm import causal_dwconv, causal_dwconv_step
+
+
+def rglru_init(rng, cfg: ModelConfig):
+    g = cfg.rglru
+    d = cfg.d_model
+    w = g.lru_width or d
+    r = jax.random.split(rng, 7)
+    # Lambda init so a^c in [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(r[5], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * g.c_const)))  # inv softplus
+    return {
+        "w_gate_branch": dense_init(r[0], d, w, cfg.param_dtype),
+        "w_rec_branch": dense_init(r[1], d, w, cfg.param_dtype),
+        "conv_w": (jax.random.normal(r[2], (g.conv_width, w), jnp.float32)
+                   * 0.1).astype(cfg.param_dtype),
+        "w_r": dense_init(r[3], w, w, cfg.param_dtype),
+        "w_i": dense_init(r[4], w, w, cfg.param_dtype),
+        "lambda_raw": lam,
+        "w_out": dense_init(r[6], w, d, cfg.param_dtype),
+    }
+
+
+def _gates(p, x, cfg: ModelConfig):
+    g = cfg.rglru
+    r = jax.nn.sigmoid((x @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_i"]).astype(jnp.float32))
+    log_a = -g.c_const * jax.nn.softplus(p["lambda_raw"]) * r   # (…, W)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via log: 0.5*log1p(-exp(2 log_a))
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i
+
+
+def rglru_scan(a, bx):
+    """h_t = a_t h_{t-1} + bx_t via associative scan. a, bx: (B, S, W)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    a_out, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    del a_out
+    return h
+
+
+def rglru_apply_full(p, x, cfg: ModelConfig, h0=None):
+    """x: (B, S, D) -> (B, S, D), decode cache {conv, h}."""
+    g = cfg.rglru
+    gate = jax.nn.silu(x @ p["w_gate_branch"])
+    u_pre = x @ p["w_rec_branch"]
+    u = causal_dwconv(u_pre, p["conv_w"])
+    a, scale = _gates(p, u, cfg)
+    bx = scale * u.astype(jnp.float32)
+    if h0 is not None:
+        # fold the incoming state into the first step
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+    h = rglru_scan(a, bx)
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    conv_tail = u_pre[:, -(g.conv_width - 1):].astype(cfg.compute_dtype)
+    return out, {"conv": conv_tail, "h": h[:, -1]}
+
+
+def rglru_apply_decode(p, x, cache, cfg: ModelConfig):
+    """x: (B, 1, D); cache: {conv (B,W-1,Wd), h (B,Wd)}."""
+    x_t = x[:, 0]
+    gate = jax.nn.silu(x_t @ p["w_gate_branch"])
+    u = x_t @ p["w_rec_branch"]
+    u, conv_state = causal_dwconv_step(u, cache["conv"], p["conv_w"])
+    a, scale = _gates(p, u, cfg)
+    h = a * cache["h"] + scale * u.astype(jnp.float32)
+    out = ((h.astype(x.dtype) * gate) @ p["w_out"])[:, None]
+    return out, {"conv": conv_state, "h": h}
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int):
+    g = cfg.rglru
+    w = g.lru_width or cfg.d_model
+    return {"conv": jnp.zeros((batch, g.conv_width - 1, w), cfg.compute_dtype),
+            "h": jnp.zeros((batch, w), jnp.float32)}

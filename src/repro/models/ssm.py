@@ -1,0 +1,333 @@
+"""xLSTM blocks (arXiv:2405.04517): chunkwise-parallel mLSTM + scan sLSTM.
+
+mLSTM uses the stabilized matrix-memory recurrence
+    C_t = f_t C_{t-1} + i_t v_t k_t^T,   n_t = f_t n_{t-1} + i_t k_t,
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t)),
+computed in *chunkwise-parallel* form (intra-chunk quadratic of size
+``chunk_size``, inter-chunk lax.scan over the recurrent state) — the TPU
+adaptation: the chunk is the MXU tile, the scan is the sequential axis,
+and memory stays O(S * chunk) instead of O(S^2).
+
+sLSTM is inherently sequential (block-diagonal recurrent weights feed the
+gates), so it is a lax.scan over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, norm_apply
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (width-4 prenet used by both block types)
+# ---------------------------------------------------------------------------
+
+
+def causal_dwconv(x, w):
+    """x: (B, S, D); w: (W, D) depthwise causal conv."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out
+
+
+def causal_dwconv_step(x_t, conv_state, w):
+    """x_t: (B, D); conv_state: (B, W-1, D) (oldest..newest)."""
+    width = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,D)
+    out = jnp.einsum("bwd,wd->bd", window, w)
+    new_state = window[:, 1:] if width > 1 else conv_state
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(rng, cfg: ModelConfig):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    di = int(xc.proj_factor_mlstm * d)
+    h = cfg.num_heads
+    r = jax.random.split(rng, 9)
+    return {
+        "w_up": dense_init(r[0], d, 2 * di, cfg.param_dtype),
+        "conv_w": (jax.random.normal(r[1], (xc.conv_width, di), jnp.float32)
+                   * 0.1).astype(cfg.param_dtype),
+        "wq": dense_init(r[2], di, di, cfg.param_dtype),
+        "wk": dense_init(r[3], di, di, cfg.param_dtype),
+        "wv": dense_init(r[4], di, di, cfg.param_dtype),
+        "w_i": dense_init(r[5], di, h, jnp.float32),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "w_f": dense_init(r[6], di, h, jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # forget bias -> long memory
+        "skip_scale": jnp.ones((di,), cfg.param_dtype),
+        "gn_scale": jnp.ones((di,), cfg.param_dtype),
+        "w_down": dense_init(r[7], di, d, cfg.param_dtype),
+    }
+
+
+def _mlstm_heads(p, x_conv, x_up, cfg):
+    b, s, di = x_conv.shape
+    h = cfg.num_heads
+    dh = di // h
+    q = (x_conv @ p["wq"]).reshape(b, s, h, dh)
+    k = (x_conv @ p["wk"]).reshape(b, s, h, dh) / math.sqrt(dh)
+    v = (x_up @ p["wv"]).reshape(b, s, h, dh)
+    li = (x_conv.astype(jnp.float32) @ p["w_i"] + p["b_i"])           # (B,S,H)
+    lf = jax.nn.log_sigmoid(x_conv.astype(jnp.float32) @ p["w_f"] + p["b_f"])
+    return q, k, v, li, lf
+
+
+def _groupnorm_heads(x, scale, num_heads):
+    """Per-head group norm over the head dim. x: (B, S, DI)."""
+    b, s, di = x.shape
+    xh = x.reshape(b, s, num_heads, di // num_heads).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + 1e-6)
+    return (xh.reshape(b, s, di) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlstm_chunkwise(q, k, v, li, lf, chunk: int, state=None):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B, S, H, Dh); li, lf: (B, S, H) log input/forget gates.
+    state: optional (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H)).
+    Returns h_out (B,S,H,Dh), final state.
+    """
+    b, s0, nh, dh = q.shape
+    L = min(chunk, s0)
+    pad = (-s0) % L
+    if pad:
+        # state-neutral padding: i=0 (log -inf), f=1 (log 0) leaves the
+        # recurrent state untouched through padded steps.
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, zp) for t in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)), constant_values=0.0)
+    s = s0 + pad
+    nc = s // L
+
+    def resh(x):
+        return x.reshape(b, nc, L, *x.shape[2:]).swapaxes(0, 1)  # (NC,B,L,...)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    lic, lfc = resh(li), resh(lf)
+
+    if state is None:
+        C0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def body(carry, xs):
+        C, n, m = carry
+        qb, kb, vb, lib, lfb = xs                 # (B,L,H,*)
+        cum = jnp.cumsum(lfb, axis=1)             # inclusive (B,L,H)
+        # stabilizer per query position t
+        src = lib - cum                           # (B,L,H): li_s - b_s
+        run_max = jax.lax.cummax(src, axis=1)     # max_{s<=t}(li_s - b_s)
+        m_t = cum + jnp.maximum(m[:, None, :], run_max)        # (B,L,H)
+        # intra-chunk decay matrix (B,H,L,L): t rows, s cols
+        dmat = (cum[:, :, None, :] - cum[:, None, :, :]
+                + lib[:, None, :, :]) - m_t[:, :, None, :]
+        dmat = jnp.transpose(dmat, (0, 3, 1, 2))  # (B,H,L,L)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        dmat = jnp.where(causal[None, None], dmat, -jnp.inf)
+        dec = jnp.exp(dmat)
+        scores = jnp.einsum("blhd,bshd->bhls", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32)) * dec
+        # inter-chunk contribution
+        inter_w = jnp.exp(cum + m[:, None, :] - m_t)          # (B,L,H)
+        h_inter = jnp.einsum("blhd,bhde->blhe", qb.astype(jnp.float32), C)
+        n_inter = jnp.einsum("blhd,bhd->blh", qb.astype(jnp.float32), n)
+        num = (jnp.einsum("bhls,bshd->blhd", scores, vb.astype(jnp.float32))
+               + h_inter * inter_w[..., None])
+        den = jnp.sum(scores, axis=-1).transpose(0, 2, 1) + n_inter * inter_w
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h_out = (num / den[..., None]).astype(qb.dtype)
+        # state update to chunk end
+        cum_L = cum[:, -1, :]                                  # (B,H)
+        m_new = cum_L + jnp.maximum(m, run_max[:, -1, :])
+        w_old = jnp.exp(cum_L + m - m_new)                     # (B,H)
+        w_s = jnp.exp(cum_L[:, None] - cum + lib - m_new[:, None])  # (B,L,H)
+        C_new = (C * w_old[..., None, None]
+                 + jnp.einsum("blh,blhd,blhe->bhde", w_s,
+                              kb.astype(jnp.float32), vb.astype(jnp.float32)))
+        n_new = (n * w_old[..., None]
+                 + jnp.einsum("blh,blhd->bhd", w_s, kb.astype(jnp.float32)))
+        return (C_new, n_new, m_new), h_out
+
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    h_out = hs.swapaxes(0, 1).reshape(b, s, nh, dh)[:, :s0]
+    return h_out, (C, n, m)
+
+
+def mlstm_step(q, k, v, li, lf, state):
+    """Single decode step. q,k,v: (B,H,Dh); li,lf: (B,H)."""
+    C, n, m = state
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(li - m_new)
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    C = C * fp[..., None, None] + ip[..., None, None] * kf[..., :, None] * vf[..., None, :]
+    n = n * fp[..., None] + ip[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
+    return (num / den[..., None]).astype(q.dtype), (C, n, m_new)
+
+
+def mlstm_apply_full(p, x, cfg: ModelConfig, state=None):
+    """x: (B,S,D) -> (B,S,D), decode cache {conv, C, n, m}."""
+    xc = cfg.xlstm
+    up = x @ p["w_up"]
+    di = up.shape[-1] // 2
+    x_up, z_gate = up[..., :di], up[..., di:]
+    x_conv = jax.nn.silu(causal_dwconv(x_up, p["conv_w"]))
+    q, k, v, li, lf = _mlstm_heads(p, x_conv, x_up, cfg)
+    h, (C, n, m) = mlstm_chunkwise(q, k, v, li, lf, xc.chunk_size, state)
+    h = h.reshape(x.shape[0], x.shape[1], di)
+    h = _groupnorm_heads(h, p["gn_scale"], cfg.num_heads)
+    h = h + p["skip_scale"] * x_conv
+    out = (h * jax.nn.silu(z_gate)) @ p["w_down"]
+    conv_tail = x_up[:, -(xc.conv_width - 1):].astype(cfg.compute_dtype)
+    return out, {"conv": conv_tail, "C": C, "n": n, "m": m}
+
+
+def mlstm_apply_decode(p, x, cache, cfg: ModelConfig):
+    """x: (B,1,D); cache: {conv_state, C, n, m}."""
+    b = x.shape[0]
+    up = x[:, 0] @ p["w_up"]
+    di = up.shape[-1] // 2
+    x_up, z_gate = up[..., :di], up[..., di:]
+    xc_t, conv_state = causal_dwconv_step(x_up, cache["conv"], p["conv_w"])
+    x_conv = jax.nn.silu(xc_t)
+    h = cfg.num_heads
+    dh = di // h
+    q = (x_conv @ p["wq"]).reshape(b, h, dh)
+    k = (x_conv @ p["wk"]).reshape(b, h, dh) / math.sqrt(dh)
+    v = (x_up @ p["wv"]).reshape(b, h, dh)
+    li = (x_conv.astype(jnp.float32) @ p["w_i"] + p["b_i"])
+    lf = jax.nn.log_sigmoid(x_conv.astype(jnp.float32) @ p["w_f"] + p["b_f"])
+    hv, (C, n, m) = mlstm_step(q, k, v, li, lf, (cache["C"], cache["n"], cache["m"]))
+    hv = hv.reshape(b, 1, di)
+    hv = _groupnorm_heads(hv, p["gn_scale"], cfg.num_heads)
+    hv = hv + p["skip_scale"] * x_conv[:, None]
+    out = (hv * jax.nn.silu(z_gate)[:, None]) @ p["w_down"]
+    return out, {"conv": conv_state, "C": C, "n": n, "m": m}
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int):
+    xc = cfg.xlstm
+    di = int(xc.proj_factor_mlstm * cfg.d_model)
+    h = cfg.num_heads
+    dh = di // h
+    return {"conv": jnp.zeros((batch, xc.conv_width - 1, di), cfg.compute_dtype),
+            "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    r = jax.random.split(rng, 4)
+    # input projections for 4 gates (z, i, f, o) and block-diagonal recurrent
+    return {
+        "w_in": dense_init(r[0], d, 4 * d, cfg.param_dtype),
+        "b_in": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                                 jnp.full((d,), 3.0, jnp.float32),
+                                 jnp.zeros((d,), jnp.float32)]).astype(jnp.float32),
+        "r_blocks": (jax.random.normal(r[1], (4, h, dh, dh), jnp.float32)
+                     / math.sqrt(dh)).astype(cfg.param_dtype),
+        "gn_scale": jnp.ones((d,), cfg.param_dtype),
+        "w_up": dense_init(r[2], d, int(cfg.xlstm.proj_factor_slstm * d) * 2,
+                           cfg.param_dtype),
+        "w_down": dense_init(r[3], int(cfg.xlstm.proj_factor_slstm * d), d,
+                             cfg.param_dtype),
+    }
+
+
+def _slstm_cell(p, x_gates, hcnm, num_heads):
+    """x_gates: (B, 4D) precomputed input part; recurrent part added here."""
+    h_prev, c_prev, n_prev, m_prev = hcnm
+    b, d = h_prev.shape
+    dh = d // num_heads
+    hh = h_prev.reshape(b, num_heads, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh.astype(jnp.float32),
+                     p["r_blocks"].astype(jnp.float32)).reshape(4, b, d)
+    g = x_gates.astype(jnp.float32).reshape(b, 4, d).transpose(1, 0, 2) + rec
+    z, i_raw, f_raw, o_raw = g[0], g[1], g[2], g[3]
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o_raw)
+    li = i_raw
+    lf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(lf + m_prev, li)
+    ip = jnp.exp(li - m_new)
+    fp = jnp.exp(lf + m_prev - m_new)
+    c_new = fp * c_prev + ip * z
+    n_new = fp * n_prev + ip
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_apply_full(p, x, cfg: ModelConfig, state=None):
+    from repro.models.layers import shard_batch
+    b, s, d = x.shape
+    x_gates = x @ p["w_in"] + p["b_in"].astype(x.dtype)
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((b, d), -1e30, jnp.float32))
+    # keep the recurrent state batch-sharded: a feature-sharded carry makes
+    # GSPMD all-reduce the block-diagonal recurrent einsum EVERY time step
+    # (measured 412 GB/device on train_4k — see EXPERIMENTS.md §Perf)
+    state = tuple(shard_batch(t) for t in state)
+
+    def body(carry, xg):
+        new = _slstm_cell(p, xg, carry, cfg.num_heads)
+        new = tuple(shard_batch(t) for t in new)
+        return new, new[0]
+
+    state, hs = jax.lax.scan(body, state, x_gates.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)                         # (B,S,D)
+    h = _groupnorm_heads(h, p["gn_scale"], cfg.num_heads)
+    up = h @ p["w_up"]
+    dff = up.shape[-1] // 2
+    out = (jax.nn.gelu(up[..., :dff]) * up[..., dff:]) @ p["w_down"]
+    return out, state
+
+
+def slstm_apply_decode(p, x, cache, cfg: ModelConfig):
+    b = x.shape[0]
+    x_gates = x[:, 0] @ p["w_in"] + p["b_in"].astype(x.dtype)
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    state = _slstm_cell(p, x_gates, state, cfg.num_heads)
+    h = state[0][:, None].astype(x.dtype)
+    h = _groupnorm_heads(h, p["gn_scale"], cfg.num_heads)
+    up = h @ p["w_up"]
+    dff = up.shape[-1] // 2
+    out = (jax.nn.gelu(up[..., :dff]) * up[..., dff:]) @ p["w_down"]
+    return out, {"h": state[0], "c": state[1], "n": state[2], "m": state[3]}
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    zeros = jnp.zeros((batch, d), jnp.float32)
+    return {"h": zeros, "c": zeros, "n": zeros,
+            "m": jnp.full((batch, d), -1e30, jnp.float32)}

@@ -1,0 +1,117 @@
+"""Pure-JAX optimizers (no optax in this container): SGD / Momentum /
+Adam / AdamW, all pytree-based (init_fn, update_fn) pairs.
+
+``update_fn(grads, state, params) -> (updates, state)`` follows the optax
+convention so the FL client and the big-model train driver share code.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: callable
+    update: callable
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params=None):
+        new_m = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                             state, grads)
+        ups = jax.tree.map(lambda m: -lr * m, new_m)
+        return ups, new_m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+    count: jnp.ndarray
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, moment_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, moment_dtype)
+        return AdamState(mu=jax.tree.map(zeros, params),
+                         nu=jax.tree.map(zeros, params),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: (b1 * m.astype(jnp.float32)
+                                        + (1 - b1) * g.astype(jnp.float32)
+                                        ).astype(moment_dtype),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2)
+                          * jnp.square(g.astype(jnp.float32))
+                          ).astype(moment_dtype), state.nu, grads)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m, v, p):
+            m = m.astype(jnp.float32)
+            v = v.astype(jnp.float32)
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p.ndim >= 2:   # decay matrices only
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        ups = jax.tree.map(upd, mu, nu, params)
+        return ups, AdamState(mu=mu, nu=nu, count=count)
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, **kw) -> Optimizer:
+    return adamw(lr, weight_decay=0.0, **kw)
+
+
+def make_optimizer(name: str, lr: float, weight_decay: float = 0.0) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr)
+    if name == "adam":
+        return adam(lr)
+    if name == "adamw":
+        return adamw(lr, weight_decay=weight_decay)
+    if name == "adamw_bf16":
+        # half-width moments: halves optimizer HBM traffic + state bytes
+        # (beyond-paper §Perf lever; real TPU systems pair this with
+        # stochastic rounding)
+        return adamw(lr, weight_decay=weight_decay, moment_dtype=jnp.bfloat16)
+    raise ValueError(name)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm

@@ -1,0 +1,137 @@
+"""Unit tests for the CAFL-L core: duals, dead-zone, policy, token budget,
+resource proxies, freezing masks, aggregation."""
+import numpy as np
+import pytest
+
+from repro.configs import Budgets, DualConfig, FLConfig
+from repro.core.duals import (DualState, deadzone, dual_update,
+                              lagrangian_value, usage_ratios)
+from repro.core.policy import Knobs, fedavg_knobs, policy, token_budget_accum
+from repro.core.resources import BYTES_PER_PARAM, TABLE1_FEDAVG, calibrate
+
+FL = FLConfig()
+
+
+def test_deadzone():
+    assert deadzone(1.0, 0.05) == 0.0
+    assert deadzone(1.04, 0.05) == 0.0
+    assert deadzone(0.97, 0.05) == 0.0
+    assert deadzone(1.2, 0.05) == pytest.approx(0.2)
+    assert deadzone(0.5, 0.05) == pytest.approx(-0.5)
+
+
+def test_dual_update_directions():
+    st = DualState()
+    budgets = Budgets(energy=1.0, comm_mb=1.0, memory=1.0, temp=1.0)
+    cfg = DualConfig(eta=0.5, deadzone=0.05)
+    # over budget -> dual rises
+    st2 = dual_update(st, {"energy": 2.0, "comm": 1.0, "memory": 0.5,
+                           "temp": 1.02}, budgets, cfg)
+    assert st2.lam["energy"] == pytest.approx(0.5)
+    assert st2.lam["comm"] == 0.0                      # inside dead-zone
+    assert st2.lam["memory"] == 0.0                    # clamped at 0
+    assert st2.lam["temp"] == 0.0                      # inside dead-zone
+    # under budget -> dual decays toward 0
+    st3 = dual_update(st2, {"energy": 0.5, "comm": 1.0, "memory": 0.5,
+                            "temp": 1.0}, budgets, cfg)
+    assert st3.lam["energy"] < st2.lam["energy"]
+
+
+def test_dual_clamps():
+    budgets = Budgets(energy=1.0, comm_mb=1.0, memory=1.0, temp=1.0)
+    cfg = DualConfig(eta=100.0, deadzone=0.05, lambda_max=10.0)
+    st = dual_update(DualState(), {"energy": 99.0, "comm": 99.0,
+                                   "memory": 99.0, "temp": 99.0}, budgets, cfg)
+    assert all(v == 10.0 for v in st.lam.values())
+
+
+def test_policy_baseline_at_zero_duals():
+    kn = policy(DualState(), FL)
+    assert (kn.k, kn.s, kn.b, kn.q) == (FL.k_base, FL.s_base, FL.b_base, 0)
+    assert kn.grad_accum == 1
+
+
+def test_policy_floors():
+    st = DualState(lam={"energy": 10.0, "comm": 10.0, "memory": 10.0,
+                        "temp": 10.0})
+    kn = policy(st, FL)
+    assert kn.k == FL.duals.k_min
+    assert kn.s == FL.duals.s_min
+    assert kn.b >= FL.duals.b_min
+    assert kn.q == 2
+
+
+def test_policy_monotone_in_duals():
+    lo = policy(DualState(lam={"energy": 0.5, "comm": 0.5, "memory": 0.5,
+                               "temp": 0.5}), FL)
+    hi = policy(DualState(lam={"energy": 2.0, "comm": 2.0, "memory": 2.0,
+                               "temp": 2.0}), FL)
+    assert hi.k <= lo.k and hi.s <= lo.s and hi.b <= lo.b and hi.q >= lo.q
+
+
+def test_token_budget_preservation():
+    t_target = FL.s_base * FL.b_base
+    for s in (10, 17, 40):
+        for b in (8, 16, 32):
+            ga = token_budget_accum(FL, s, b)
+            assert s * b * ga >= t_target          # never under-trains
+            assert s * b * (ga - 1) < t_target     # minimal accum (Eq. 8)
+
+
+def test_calibration_matches_table1_fedavg_row():
+    res = calibrate(1.9e6, FL)
+    kn = fedavg_knobs(FL)
+    u = res.usage(1.9e6, kn)
+    assert u["energy"] == pytest.approx(TABLE1_FEDAVG["energy"], rel=1e-6)
+    assert u["comm"] == pytest.approx(TABLE1_FEDAVG["comm"], rel=1e-6)
+    assert u["memory"] == pytest.approx(TABLE1_FEDAVG["memory"], rel=1e-6)
+    assert u["temp"] == pytest.approx(TABLE1_FEDAVG["temp"], rel=1e-6)
+
+
+def test_proxies_scale_as_appendix_a1():
+    res = calibrate(2e6, FL)
+    kn = fedavg_knobs(FL)
+    u0 = res.usage(2e6, kn)
+    # energy linear in params, s, b
+    assert res.usage(1e6, kn)["energy"] == pytest.approx(u0["energy"] / 2)
+    half_s = Knobs(k=kn.k, s=kn.s // 2, b=kn.b, q=0)
+    assert res.usage(2e6, half_s)["energy"] == pytest.approx(u0["energy"] / 2)
+    # comm scales with bytes_per_param(q)
+    for q in (1, 2):
+        kq = Knobs(k=kn.k, s=kn.s, b=kn.b, q=q)
+        assert res.usage(2e6, kq)["comm"] == pytest.approx(
+            u0["comm"] * BYTES_PER_PARAM[q] / 4.0)
+    # memory has a floor: params->0 keeps 0.2*alpha_m
+    assert res.usage(0.0, kn)["memory"] == pytest.approx(0.2 * res.alpha_m)
+
+
+def test_control_loop_converges_into_budgets():
+    """End-to-end dual/policy dynamics with proxy-only usage (no NN)."""
+    res = calibrate(1.9e6, FL)
+    duals = DualState()
+
+    def p_active(k):
+        return 1.9e6 * (0.94 * k / FL.k_base + 0.06)
+
+    ratios_hist = []
+    for _ in range(80):
+        kn = policy(duals, FL)
+        u = res.usage(p_active(kn.k), kn)
+        duals = dual_update(duals, u, FL.budgets, FL.duals)
+        ratios_hist.append(usage_ratios(u, FL.budgets))
+    tail = ratios_hist[-10:]
+    for r in ("energy", "comm", "memory", "temp"):
+        mean_r = np.mean([x[r] for x in tail])
+        assert mean_r < 1.15, f"{r} not controlled: {mean_r:.2f}"
+    # and FedAvg violates comm/memory (the paper's Fig. 2)
+    u_fa = res.usage(1.9e6, fedavg_knobs(FL))
+    r_fa = usage_ratios(u_fa, FL.budgets)
+    assert r_fa["comm"] > 5.0 and r_fa["memory"] > 1.05
+
+
+def test_lagrangian_value_penalty():
+    budgets = Budgets(energy=1.0, comm_mb=1.0, memory=1.0, temp=1.0)
+    st = DualState(lam={"energy": 2.0, "comm": 0.0, "memory": 0.0, "temp": 0.0})
+    val = lagrangian_value(1.0, {"energy": 1.5, "comm": 0.1, "memory": 0.1,
+                                 "temp": 0.1}, budgets, st)
+    assert val == pytest.approx(1.0 + 2.0 * 0.5)

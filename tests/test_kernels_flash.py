@@ -1,0 +1,99 @@
+"""Pallas flash-attention kernel vs oracle: shape/dtype/feature sweeps in
+interpret mode, plus equivalence of the model's pure-JAX blockwise path."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.models.layers import blockwise_attention
+
+
+def mk(rng, b, s, h, kvh, d, dtype=np.float32):
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(dtype))
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, d)).astype(dtype))
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, d)).astype(dtype))
+    return q, k, v
+
+
+@pytest.mark.parametrize("s,blk", [(128, 128), (256, 128), (512, 128)])
+@pytest.mark.parametrize("h,kvh", [(4, 4), (4, 2), (8, 1)])
+def test_flash_causal_matches_ref(s, blk, h, kvh, rng):
+    q, k, v = mk(rng, 2, s, h, kvh, 64)
+    out = flash_attention_bhsd(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3), causal=True,
+                               blk_q=blk, blk_k=blk, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out.transpose(0, 2, 1, 3)),
+                               np.asarray(exp), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_flash_window_softcap(window, softcap, rng):
+    q, k, v = mk(rng, 1, 256, 4, 2, 32)
+    out = flash_attention_bhsd(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3), causal=True,
+                               window=window, softcap=softcap, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=True, window=window,
+                                  softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out.transpose(0, 2, 1, 3)),
+                               np.asarray(exp), atol=2e-5)
+
+
+def test_flash_bidirectional(rng):
+    q, k, v = mk(rng, 2, 128, 4, 4, 64)
+    out = flash_attention_bhsd(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3), causal=False,
+                               interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out.transpose(0, 2, 1, 3)),
+                               np.asarray(exp), atol=2e-5)
+
+
+def test_flash_bf16(rng):
+    q, k, v = mk(rng, 1, 128, 4, 4, 64)
+    q, k, v = (t.astype(jnp.bfloat16) for t in (q, k, v))
+    out = flash_attention_bhsd(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3), causal=True,
+                               interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out.transpose(0, 2, 1, 3), np.float32),
+        np.asarray(exp, np.float32), atol=3e-2)
+
+
+@pytest.mark.parametrize("s,q_chunk", [(96, 32), (256, 64), (130, 64)])
+@pytest.mark.parametrize("window", [None, 48])
+def test_model_blockwise_path_matches_oracle(s, q_chunk, window, rng):
+    """The pure-JAX blockwise attention used by every model (and by the
+    dry-run lowering) is numerically the same computation as the kernel."""
+    q, k, v = mk(rng, 2, s, 4, 2, 32)
+    out = blockwise_attention(q, k, v, window=window, softcap=None,
+                              q_chunk=q_chunk)
+    exp = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
+
+
+def test_online_softmax_long_kv_path(rng):
+    """Force the inner kv-chunk scan (L > 2*kv_chunk) in _attend_block."""
+    from repro.models.layers import _attend_block
+    b, cq, h, d = 1, 16, 2, 32
+    L = 640
+    q = jnp.asarray(rng.normal(size=(b, cq, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, L, h, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, L, h, d)).astype(np.float32))
+    qpos = jnp.arange(L - cq, L)
+    kpos = jnp.arange(L)
+    out = _attend_block(q, k, v, qpos, kpos, 1 / math.sqrt(d), None, None,
+                        kv_chunk=128)
+    # oracle: direct softmax
+    scores = jnp.einsum("bqhd,blhd->bhql", q, k) / math.sqrt(d)
+    mask = kpos[None, :] <= qpos[:, None]
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    exp = jnp.einsum("bhql,blhd->bqhd", w, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)

@@ -1,0 +1,87 @@
+"""Pallas quantization kernel vs pure-jnp oracle: shape/dtype sweeps in
+interpret mode (assignment requirement) + quantization-error bounds +
+hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.quantize import ROWS_PER_TILE, dequantize_blocks, quantize_blocks
+
+
+@pytest.mark.parametrize("bits", [8, 2])
+@pytest.mark.parametrize("n_blocks,block", [(8, 256), (16, 128), (32, 512)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_kernel_matches_ref_blocks(bits, n_blocks, block, dtype, rng):
+    x = jnp.asarray(rng.normal(size=(n_blocks, block)).astype(np.float32),
+                    dtype=dtype).astype(jnp.float32)
+    codes_k, scales_k = quantize_blocks(x, bits, interpret=True)
+    codes_r, scales_r = ref.quantize_blocks_ref(x, bits)
+    np.testing.assert_array_equal(np.asarray(codes_k), np.asarray(codes_r))
+    np.testing.assert_allclose(np.asarray(scales_k), np.asarray(scales_r),
+                               rtol=1e-6)
+    deq_k = dequantize_blocks(codes_k, scales_k, interpret=True)
+    deq_r = ref.dequantize_blocks_ref(codes_r, scales_r)
+    np.testing.assert_allclose(np.asarray(deq_k), np.asarray(deq_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits,max_rel_err", [(8, 1 / 128), (2, 1 / 2)])
+def test_quantization_error_bound(bits, max_rel_err, rng):
+    """Mid-rise quantizer error is at most scale/2 = absmax/(2L)."""
+    x = jnp.asarray(rng.normal(size=(2048,)).astype(np.float32))
+    y = ops.quantize_dequantize(x, bits=bits, block=256)
+    err = np.abs(np.asarray(y - x))
+    blocks = np.asarray(x).reshape(-1, 256)
+    absmax = np.abs(blocks).max(axis=1, keepdims=True)
+    bound = np.repeat(absmax / (2 ** (bits - 1)) / 2, 256, axis=1).reshape(-1)
+    assert np.all(err <= bound + 1e-6)
+
+
+def test_arbitrary_shapes_roundtrip(rng):
+    for shape in [(37,), (3, 129), (5, 7, 11), (1,), (2048, 3)]:
+        x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+        y = ops.quantize_dequantize(x, bits=8)
+        assert y.shape == x.shape
+        assert float(jnp.max(jnp.abs(y - x))) < float(jnp.max(jnp.abs(x)))
+
+
+def test_zero_blocks_stay_zero():
+    x = jnp.zeros((1024,), jnp.float32)
+    for bits in (8, 2):
+        y = ops.quantize_dequantize(x, bits=bits)
+        np.testing.assert_array_equal(np.asarray(y), 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 513), st.sampled_from([2, 8]),
+       st.floats(0.01, 100.0))
+def test_property_error_bound_and_shape(rows, cols, bits, scale):
+    """Property: round-trip preserves shape, error bounded by
+    absmax/2^bits per block, idempotent on already-quantized data."""
+    rng = np.random.default_rng(rows * 1000 + cols)
+    x = jnp.asarray((rng.normal(size=(rows, cols)) * scale).astype(np.float32))
+    y = ops.quantize_dequantize(x, bits=bits, block=256)
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(y)))
+    amax = float(jnp.max(jnp.abs(x)))
+    bound = amax / (2 ** (bits - 1)) / 2
+    # relative slack: scale and (code+0.5)*scale round in fp32
+    assert float(jnp.max(jnp.abs(y - x))) <= bound * (1 + 1e-3) + 1e-5
+    # idempotence: quantizing the dequantized signal is (nearly) stable
+    z = ops.quantize_dequantize(y, bits=bits, block=256)
+    assert float(jnp.max(jnp.abs(z - y))) <= 2 * bound * (1 + 1e-3) + 1e-5
+
+
+def test_pallas_and_ref_backends_agree(rng):
+    x = jnp.asarray(rng.normal(size=(4096 + 37,)).astype(np.float32))
+    old = ops.FORCE_BACKEND
+    try:
+        ops.FORCE_BACKEND = "pallas"
+        a = ops.quantize_dequantize(x, bits=8)
+        ops.FORCE_BACKEND = "ref"
+        b = ops.quantize_dequantize(x, bits=8)
+    finally:
+        ops.FORCE_BACKEND = old
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,239 @@
+"""Property-based tests (hypothesis) on system invariants:
+causality, chunk-size invariance, scan-vs-loop equivalence, proxy
+monotonicity, policy floors."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import FLConfig, get_smoke_config
+from repro.core.duals import DualState
+from repro.core.policy import policy
+from repro.core.resources import calibrate
+from repro.core.policy import Knobs
+from repro.models import build
+from repro.models.layers import blockwise_attention
+from repro.models.rglru import rglru_scan
+from repro.models.ssm import mlstm_chunkwise
+
+
+# ---------------------------------------------------------------------------
+# attention causality: future tokens never affect past outputs
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([16, 32, 48]))
+def test_attention_causality(seed, q_chunk):
+    rng = np.random.default_rng(seed)
+    b, s, h, d = 1, 64, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    out1 = blockwise_attention(q, k, v, window=None, softcap=None,
+                               q_chunk=q_chunk)
+    # perturb the last quarter of k/v; first half of outputs must not move
+    k2 = k.at[:, 3 * s // 4:].add(1.0)
+    v2 = v.at[:, 3 * s // 4:].add(-2.0)
+    out2 = blockwise_attention(q, k2, v2, window=None, softcap=None,
+                               q_chunk=q_chunk)
+    np.testing.assert_allclose(np.asarray(out1[:, : s // 2]),
+                               np.asarray(out2[:, : s // 2]), atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_model_causality_end_to_end(seed):
+    cfg = get_smoke_config("minitron-8b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, (1, 32)).astype(np.int32)
+    toks2 = toks.copy()
+    toks2[:, -8:] = (toks2[:, -8:] + 7) % cfg.vocab_size
+
+    def logits_at(tokens, pos):
+        batch = {"tokens": jnp.asarray(tokens),
+                 "targets": jnp.asarray(tokens)}
+        lg, _ = model.prefill(params, batch)
+        return lg  # last position only — use position `pos` via slicing below
+
+    # compare intermediate activations via loss on first half
+    mask = np.zeros((1, 32), np.float32)
+    mask[:, :16] = 1.0
+    l1, _ = model.train_loss(params, {"tokens": jnp.asarray(toks),
+                                      "targets": jnp.asarray(toks),
+                                      "loss_mask": jnp.asarray(mask)})
+    l2, _ = model.train_loss(params, {"tokens": jnp.asarray(toks2),
+                                      "targets": jnp.asarray(toks),
+                                      "loss_mask": jnp.asarray(mask)})
+    assert abs(float(l1) - float(l2)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: chunk-size invariance (chunkwise == different chunkwise)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([4, 8, 16, 64]))
+def test_mlstm_chunk_invariance(seed, chunk):
+    rng = np.random.default_rng(seed)
+    b, s, h, dh = 1, 64, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype(np.float32)) / math.sqrt(dh)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype(np.float32))
+    li = jnp.asarray(rng.normal(size=(b, s, h)).astype(np.float32))
+    lf = jnp.asarray((-np.abs(rng.normal(size=(b, s, h)))).astype(np.float32))
+    h_ref, (C_ref, n_ref, m_ref) = mlstm_chunkwise(q, k, v, li, lf, chunk=s)
+    h_c, (C_c, n_c, m_c) = mlstm_chunkwise(q, k, v, li, lf, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_ref),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(C_c), np.asarray(C_ref),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_mlstm_chunkwise_matches_stepwise():
+    """Chunkwise-parallel form == token-by-token recurrence."""
+    from repro.models.ssm import mlstm_step
+    rng = np.random.default_rng(3)
+    b, s, h, dh = 1, 24, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype(np.float32)) / math.sqrt(dh)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype(np.float32))
+    li = jnp.asarray(rng.normal(size=(b, s, h)).astype(np.float32))
+    lf = jnp.asarray((-np.abs(rng.normal(size=(b, s, h)))).astype(np.float32))
+    h_par, _ = mlstm_chunkwise(q, k, v, li, lf, chunk=8)
+    C = jnp.zeros((b, h, dh, dh))
+    n = jnp.zeros((b, h, dh))
+    m = jnp.full((b, h), -1e30)
+    outs = []
+    for t in range(s):
+        o, (C, n, m) = mlstm_step(q[:, t], k[:, t], v[:, t], li[:, t],
+                                  lf[:, t], (C, n, m))
+        outs.append(o)
+    h_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_par), np.asarray(h_seq),
+                               atol=2e-4, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU: associative scan == sequential loop
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rglru_scan_equals_loop(seed):
+    rng = np.random.default_rng(seed)
+    b, s, w = 2, 33, 8
+    a = jnp.asarray(rng.uniform(0.5, 0.999, size=(b, s, w)).astype(np.float32))
+    bx = jnp.asarray(rng.normal(size=(b, s, w)).astype(np.float32))
+    h_scan = rglru_scan(a, bx)
+    h = jnp.zeros((b, w))
+    hs = []
+    for t in range(s):
+        h = a[:, t] * h + bx[:, t]
+        hs.append(h)
+    h_loop = jnp.stack(hs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_scan), np.asarray(h_loop),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# policy / proxy properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(*(st.floats(0.0, 10.0) for _ in range(4)))
+def test_policy_respects_floors_everywhere(le, lc, lm, lt):
+    fl = FLConfig()
+    kn = policy(DualState(lam={"energy": le, "comm": lc, "memory": lm,
+                               "temp": lt}), fl)
+    d = fl.duals
+    assert kn.k >= d.k_min and kn.s >= d.s_min and kn.b >= d.b_min
+    assert kn.q in (0, 1, 2)
+    assert kn.k <= fl.k_base and kn.s <= fl.s_base and kn.b <= fl.b_base
+    assert kn.s * kn.b * kn.grad_accum >= fl.s_base * fl.b_base
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1e5, 1e8), st.integers(10, 80), st.integers(8, 64),
+       st.sampled_from([0, 1, 2]))
+def test_proxy_monotonicity(p, s, b, q):
+    fl = FLConfig()
+    res = calibrate(2e6, fl)
+    kn = Knobs(k=6, s=s, b=b, q=q)
+    u = res.usage(p, kn)
+    assert all(v >= 0 for v in u.values())
+    u_more_params = res.usage(p * 2, kn)
+    assert u_more_params["energy"] > u["energy"]
+    assert u_more_params["comm"] > u["comm"]
+    assert u_more_params["memory"] > u["memory"]
+    kn2 = Knobs(k=6, s=s + 1, b=b, q=q)
+    assert res.usage(p, kn2)["energy"] > u["energy"]
+    assert res.usage(p, kn2)["temp"] > u["temp"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 64))
+def test_rope_relative_shift_invariance(seed, shift):
+    """RoPE attention scores depend only on relative positions: shifting
+    all positions by a constant leaves q·k scores unchanged."""
+    from repro.models.layers import rope
+    rng = np.random.default_rng(seed)
+    b, s, h, d = 1, 8, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    def scores(p):
+        qr = rope(q, p, 10_000.0)
+        kr = rope(k, p, 10_000.0)
+        return jnp.einsum("bqhd,bkhd->bhqk", qr, kr)
+    s0 = scores(pos)
+    s1 = scores(pos + shift)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_mla_decode_matches_full_expansion():
+    """Absorbed-matmul MLA decode == non-absorbed full expansion."""
+    from repro.configs import get_smoke_config
+    from repro.models import build
+    cfg = get_smoke_config("deepseek-v3-671b")
+    import dataclasses
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(5))
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 24)), jnp.int32)
+    lg, cache = model.prefill(params, {"tokens": toks[:, :20]},
+                              max_new_tokens=8)
+    for t in range(4):
+        lg, cache = model.decode_step(params, cache, toks[:, 20 + t:21 + t])
+    full, _ = model.prefill(params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, 0]),
+                               atol=3e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6))
+def test_freezing_monotone_and_headroom(k):
+    """count_active is monotone in k and the head stays trainable."""
+    from repro.configs import get_config
+    from repro.core.freezing import count_active, mask_tree
+    from repro.models import build
+    cfg = get_config("charlm-shakespeare").replace(vocab_size=64)
+    model = build(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params)
+    m_k = mask_tree(params, cfg, k)
+    a_k = count_active(params, m_k)
+    if k < cfg.num_layers:
+        m_k1 = mask_tree(params, cfg, k + 1)
+        assert count_active(params, m_k1) >= a_k
+    # final norm always trainable
+    assert float(np.asarray(jax.tree.leaves(m_k["io"]["final_norm"])[0])) == 1.0
