@@ -1,0 +1,72 @@
+"""Executor micro-benchmark: sequential Python loop vs the batched
+(jit + vmap-of-scan) LocalTrain path, same tiny char-LM round.
+
+    PYTHONPATH=src:. python benchmarks/fl_engine_bench.py
+
+Emits wall-clock per round (post-warmup median) for each executor and
+the speedup, in the same CSV row format as the other benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import emit
+
+
+def rows():
+    from repro.configs import get_config, get_fl_config
+    from repro.core.client import ClientRunner
+    from repro.core.policy import fedavg_knobs
+    from repro.core.resources import calibrate
+    from repro.data import load_corpus
+    from repro.data.federated import FederatedData
+    from repro.fl import ClientInfo, DeviceProfile, make_executor
+    from repro.models import build
+
+    ds = load_corpus(target_bytes=120_000)
+    cfg = get_config("charlm-shakespeare").replace(
+        vocab_size=max(ds.vocab_size, 64), num_layers=3, d_model=96,
+        num_heads=4, num_kv_heads=4, head_dim=24, d_ff=192)
+    fl = get_fl_config().replace(num_clients=8, clients_per_round=6,
+                                 s_base=10, b_base=16, seq_len=32)
+    fl = fl.replace(duals=dataclasses.replace(fl.duals, s_min=4, b_min=4))
+    model = build(cfg)
+    import jax
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.core.freezing import count_params
+    resources = calibrate(count_params(params), fl)
+    data = FederatedData(ds.train, fl.num_clients, seed=fl.seed)
+    knobs = fedavg_knobs(fl)
+    profile = DeviceProfile("default", fl.budgets, resources=resources)
+    clients = [ClientInfo(i, profile, data.shard_size(i))
+               for i in range(fl.clients_per_round)]
+    assignments = [(ci, knobs) for ci in clients]
+
+    out = []
+    timings = {}
+    for name in ("sequential", "batched"):
+        runner = ClientRunner(model, fl, data, resources)
+        executor = make_executor(name, runner)
+        executor.run_round(params, assignments)       # warmup / compile
+        times = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            executor.run_round(params, assignments)
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        med = times[len(times) // 2]
+        timings[name] = med
+        out.append((f"fl.executor.{name}.round", med * 1e6,
+                    f"{fl.clients_per_round}clients*s{knobs.s}*b{knobs.b}"))
+    out.append(("fl.executor.batched_speedup", 0.0,
+                f"{timings['sequential'] / timings['batched']:.2f}x"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,8 @@ import sys
 import traceback
 
 MODULES = ["table1", "fig2_constraints", "fig3_energy_temp",
-           "fig4_convergence", "roofline", "kernel_bench"]
+           "fig4_convergence", "roofline", "kernel_bench",
+           "fl_engine_bench"]
 
 
 def main() -> None:

@@ -3,8 +3,6 @@ budget is tightened (pure control-loop simulation — no NN, instant).
 
     PYTHONPATH=src python examples/constraint_sweep.py
 """
-import dataclasses
-
 from repro.configs import get_fl_config
 from repro.core.duals import DualState, dual_update, usage_ratios
 from repro.core.policy import policy
@@ -38,11 +36,9 @@ def steady_state(fl_cfg, rounds=150, tail=30):
 
 
 print(f"{'budget scale':>14s} | {'mean knobs (k,s,b,q,ga)':>28s} | mean ratios E/C/M/T")
-for resource in ("comm_mb", "energy", "memory"):
+for resource in ("comm", "energy", "memory"):
     for scale in (2.0, 1.0, 0.5, 0.25):
-        base = fl.budgets
-        budgets = dataclasses.replace(base, **{
-            resource: getattr(base, resource) * scale})
+        budgets = fl.budgets.scaled(**{resource: scale})
         kn, r = steady_state(fl.replace(budgets=budgets))
         print(f"{resource}x{scale:<5g} | k={kn['k']:.1f} s={kn['s']:4.1f} "
               f"b={kn['b']:4.1f} q={kn['q']:.1f} ga={kn['grad_accum']:4.1f} | "

@@ -134,6 +134,16 @@ class Budgets:
     memory: float = 0.26
     temp: float = 1.00
 
+    def scaled(self, factor: float = 1.0, *, energy: float = 1.0,
+               comm: float = 1.0, memory: float = 1.0, temp: float = 1.0
+               ) -> "Budgets":
+        """Device-class budgets: ``scaled(0.5)`` is a fleet tier with half
+        the allowance on every resource; keyword factors scale one axis."""
+        return Budgets(energy=self.energy * factor * energy,
+                       comm_mb=self.comm_mb * factor * comm,
+                       memory=self.memory * factor * memory,
+                       temp=self.temp * factor * temp)
+
 
 @dataclass(frozen=True)
 class DualConfig:
@@ -176,6 +186,13 @@ class FLConfig:
     noniid_alpha: float = 0.0
     # ablation: disable Eq. 8 token-budget preservation (grad_accum = 1)
     token_budget: bool = True
+    # --- engine (repro.fl) ---
+    # client execution backend: "sequential" | "batched" (vmapped clients)
+    executor: str = "sequential"
+    # server-side optimizer on the aggregated pseudo-gradient
+    # ("" = plain averaging; "adam" / "momentum" = FedAdam / FedAvgM)
+    server_opt: str = ""
+    server_lr: float = 0.1
 
     def replace(self, **kw) -> "FLConfig":
         return dataclasses.replace(self, **kw)

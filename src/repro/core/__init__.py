@@ -12,5 +12,6 @@ from repro.core.policy import (  # noqa: F401
 from repro.core.resources import (  # noqa: F401
     BYTES_PER_PARAM, TABLE1_FEDAVG, ResourceModel, calibrate,
 )
+from repro.core import aggregation  # noqa: F401
+from repro.core.client import ClientResult, ClientRunner  # noqa: F401
 from repro.core.server import FLResult, RoundRecord, run_federated  # noqa: F401
-from repro.core.client import ClientRunner  # noqa: F401

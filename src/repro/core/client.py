@@ -5,13 +5,14 @@ Runs ``s`` optimizer steps, each accumulating gradients over
 Eq. 8), with the bottom layers frozen per ``k`` (gradient mask) and the
 resulting update quantized to level ``q`` for the wire.
 
-Returns (delta_tree, usage, metrics) where usage is the paper's A.1
-proxy evaluated at the executed knobs.
+``ClientRunner`` owns the jitted train-step caches shared by every
+simulated client; the ``repro.fl`` executors drive it — sequentially
+(one client at a time) or batched (a vmapped stack of clients).
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,10 +21,33 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.core import compression, freezing
 from repro.core.policy import Knobs
-from repro.core.resources import ResourceModel
+from repro.core.resources import BYTES_PER_PARAM, ResourceModel
 from repro.data.federated import FederatedData
 from repro.models.zoo import Model
 from repro.optim import make_optimizer
+
+
+@dataclass
+class ClientResult:
+    """What one client hands back to the server each round."""
+    client_id: int
+    delta: Any                  # masked, wire-compressed update tree
+    params_active: float        # masked parameter count (proxies charge this)
+    train_loss: float
+    wire_mb_actual: float       # measured bytes incl. quantization scales
+
+
+def apply_masked_update(opt, params, opt_state, grads, mask):
+    """One optimizer step under a freezing mask: frozen leaves see zero
+    gradient and zero movement; the add happens in fp32 then casts back.
+    Shared by the sequential jitted step and the batched scan body."""
+    grads = freezing.apply_mask(grads, mask)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    updates = freezing.apply_mask(updates, mask)
+    new_params = jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)
+                      ).astype(p.dtype), params, updates)
+    return new_params, opt_state
 
 
 class ClientRunner:
@@ -36,24 +60,19 @@ class ClientRunner:
         self.data = data
         self.resources = resources
         self.opt = make_optimizer(fl.optimizer, fl.lr, fl.weight_decay)
-        self._grad_fns = {}
+        self._grad_fn_cache = None
         self._masks = {}          # k -> mask tree
         self._active = {}         # k -> active param count
 
         @jax.jit
         def _apply(params, opt_state, grads, mask):
-            grads = freezing.apply_mask(grads, mask)
-            updates, opt_state = self.opt.update(grads, opt_state, params)
-            updates = freezing.apply_mask(updates, mask)
-            new_params = jax.tree.map(
-                lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)
-                              ).astype(p.dtype), params, updates)
-            return new_params, opt_state
+            return apply_masked_update(self.opt, params, opt_state, grads,
+                                       mask)
 
         self._apply = _apply
 
-    def _grad_fn(self, b: int):
-        if b not in self._grad_fns:
+    def grad_fn(self):
+        if self._grad_fn_cache is None:
             loss_fn = self.model.train_loss
 
             @jax.jit
@@ -62,8 +81,8 @@ class ClientRunner:
                     params, batch)
                 return loss, grads
 
-            self._grad_fns[b] = gf
-        return self._grad_fns[b]
+            self._grad_fn_cache = gf
+        return self._grad_fn_cache
 
     def mask_for(self, params, k: int):
         if k not in self._masks:
@@ -71,47 +90,68 @@ class ClientRunner:
             self._active[k] = freezing.count_active(params, self._masks[k])
         return self._masks[k], self._active[k]
 
-    def local_train(self, client_id: int, params, knobs: Knobs
-                    ) -> Tuple[dict, Dict[str, float], Dict[str, float]]:
-        fl = self.fl
+    def sample_batch(self, client_id: int, b: int):
+        batch = self.data.batch(client_id, b, self.fl.seq_len)
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+
+    def train_client(self, client_id: int, params, knobs: Knobs
+                     ) -> ClientResult:
+        """LocalTrain for one client. Loss stays on device until the
+        single host sync at the end (no per-microbatch ``float(loss)``)."""
         mask, active = self.mask_for(params, knobs.k)
-        grad_fn = self._grad_fn(knobs.b)
+        grad_fn = self.grad_fn()
         opt_state = self.opt.init(params)
         w = params
         losses = []
         for _ in range(knobs.s):
             grads_sum = None
             for _ in range(knobs.grad_accum):
-                batch = self.data.batch(client_id, knobs.b, fl.seq_len)
-                batch = {k2: jnp.asarray(v) for k2, v in batch.items()}
+                batch = self.sample_batch(client_id, knobs.b)
                 loss, grads = grad_fn(w, batch)
-                losses.append(float(loss))
+                losses.append(loss)
                 if grads_sum is None:
                     grads_sum = grads
                 else:
-                    grads_sum = jax.tree.map(lambda a, g: a + g, grads_sum, grads)
+                    grads_sum = jax.tree.map(lambda a, g: a + g, grads_sum,
+                                             grads)
             if knobs.grad_accum > 1:
                 grads_sum = jax.tree.map(lambda g: g / knobs.grad_accum,
                                          grads_sum)
             w, opt_state = self._apply(w, opt_state, grads_sum, mask)
 
-        delta = jax.tree.map(lambda a, b_: a.astype(jnp.float32)
-                             - b_.astype(jnp.float32), w, params)
-        # wire compression (q knob) — quantize the update, server gets the
-        # dequantized tree; masked (frozen) leaves are exact zeros either way
-        delta = compression.compress_decompress(delta, knobs.q)
-        delta = freezing.apply_mask(delta, mask)
+        delta = finalize_delta(w, params, mask, knobs.q)
+        train_loss = float(jnp.mean(jnp.stack(losses)))   # one sync/client
+        return ClientResult(
+            client_id=client_id, delta=delta, params_active=active,
+            train_loss=train_loss,
+            wire_mb_actual=_masked_wire_mb(delta, mask, knobs.q))
 
-        usage = self.resources.usage(active, knobs)
-        usage_true = self.resources.usage(active, knobs, include_accum=True)
+    def local_train(self, client_id: int, params, knobs: Knobs
+                    ) -> Tuple[dict, Dict[str, float], Dict[str, float]]:
+        """Back-compat wrapper: (delta, usage, metrics) with usage from the
+        runner's own (fleet-wide) resource model."""
+        r = self.train_client(client_id, params, knobs)
+        usage = self.resources.usage(r.params_active, knobs)
+        usage_true = self.resources.usage(r.params_active, knobs,
+                                          include_accum=True)
         metrics = {
-            "train_loss": float(np.mean(losses)),
-            "params_active": active,
-            "wire_mb_actual": _masked_wire_mb(delta, mask, knobs.q),
+            "train_loss": r.train_loss,
+            "params_active": r.params_active,
+            "wire_mb_actual": r.wire_mb_actual,
             "energy_true": usage_true["energy"],
             "temp_true": usage_true["temp"],
         }
-        return delta, usage, metrics
+        return r.delta, usage, metrics
+
+
+def finalize_delta(w, params, mask, q: int):
+    """Client update as shipped: fp32 difference, wire-compressed
+    (q knob; the server immediately dequantizes), frozen leaves exact
+    zeros either way."""
+    delta = jax.tree.map(lambda a, b_: a.astype(jnp.float32)
+                         - b_.astype(jnp.float32), w, params)
+    delta = compression.compress_decompress(delta, q)
+    return freezing.apply_mask(delta, mask)
 
 
 def _masked_wire_mb(delta, mask, q: int) -> float:
@@ -121,7 +161,7 @@ def _masked_wire_mb(delta, mask, q: int) -> float:
         m_arr = np.asarray(m)
         frac = float(np.mean(m_arr)) if m_arr.ndim else float(m_arr)
         n = frac * np.prod(leaf.shape)
-        total += n * compression.BYTES_PER_PARAM[q]
+        total += n * BYTES_PER_PARAM[q]
         if q > 0:
             total += 4.0 * (n / 256.0)
     return total / 1e6

@@ -17,6 +17,13 @@ from repro.configs.base import Budgets, DualConfig
 RESOURCES = ("energy", "comm", "memory", "temp")
 
 
+def budgets_dict(budgets: Budgets) -> Dict[str, float]:
+    """Budgets dataclass -> the {resource: bound} mapping the dual math
+    runs on (``comm_mb`` is the ``comm`` resource)."""
+    return {"energy": budgets.energy, "comm": budgets.comm_mb,
+            "memory": budgets.memory, "temp": budgets.temp}
+
+
 @dataclass
 class DualState:
     lam: Dict[str, float] = field(
@@ -35,8 +42,7 @@ def deadzone(ratio: float, delta: float) -> float:
 
 
 def usage_ratios(usage: Dict[str, float], budgets: Budgets) -> Dict[str, float]:
-    b = {"energy": budgets.energy, "comm": budgets.comm_mb,
-         "memory": budgets.memory, "temp": budgets.temp}
+    b = budgets_dict(budgets)
     return {r: usage[r] / b[r] for r in RESOURCES}
 
 
@@ -54,7 +60,6 @@ def dual_update(state: DualState, usage: Dict[str, float], budgets: Budgets,
 def lagrangian_value(loss: float, usage: Dict[str, float], budgets: Budgets,
                      state: DualState) -> float:
     """Eq. 3 evaluated at (w, lambda) — used for logging/monitoring."""
-    b = {"energy": budgets.energy, "comm": budgets.comm_mb,
-         "memory": budgets.memory, "temp": budgets.temp}
+    b = budgets_dict(budgets)
     penalty = sum(state.lam[r] * max(0.0, usage[r] - b[r]) for r in RESOURCES)
     return loss + penalty

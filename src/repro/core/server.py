@@ -1,13 +1,18 @@
-"""CAFL-L / FedAvg server (Algorithm 1).
+"""CAFL-L / FedAvg server entry point (Algorithm 1).
 
-One ``run_federated`` drives both methods: ``method="fedavg"`` uses fixed
-baseline knobs and skips dual updates; ``method="cafl"`` runs the full
-constraint-aware loop: evaluate -> policy pi(lambda) -> LocalTrain on the
-sampled clients -> aggregate -> dual ascent on mean usage.
+The federated loop itself lives in ``repro.fl`` — a composable engine of
+``FederatedStrategy`` x ``ClientExecutor`` x ``DeviceProfile`` x
+``RoundCallback``. ``run_federated`` is the seed-compatible wrapper:
+``method="fedavg"`` uses fixed baseline knobs and skips dual updates;
+``method="cafl"`` runs the full constraint-aware loop; FedOpt-style
+server optimizers compose as ``method="fedadam"`` / ``"cafl+adam"``.
+
+This module keeps the result dataclasses and the eval builder so that
+``repro.core`` and ``repro.fl`` have no import cycle (``repro.fl``
+imports them from here; the wrapper imports the engine lazily).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -16,12 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core import aggregation
-from repro.core.client import ClientRunner
-from repro.core.duals import DualState, dual_update, usage_ratios
-from repro.core.policy import Knobs, fedavg_knobs, policy
-from repro.core.resources import ResourceModel, calibrate
-from repro.data.federated import FederatedData
+from repro.core.duals import DualState
+from repro.core.resources import ResourceModel
 from repro.data.shakespeare import CharDataset, sample_batch
 from repro.models.zoo import Model
 
@@ -38,6 +39,8 @@ class RoundRecord:
     wire_mb_actual: float
     energy_true: float
     seconds: float
+    # per-device-class breakdown; empty for a homogeneous fleet
+    per_profile: Dict[str, Dict] = field(default_factory=dict)
 
 
 @dataclass
@@ -81,67 +84,15 @@ def run_federated(model: Model, fl: FLConfig, dataset: CharDataset,
                   resources: Optional[ResourceModel] = None,
                   init_params=None, init_duals: Optional[DualState] = None,
                   log=print) -> FLResult:
-    method = method or fl.method
-    rounds = rounds or fl.rounds
-    rng = np.random.default_rng(fl.seed)
+    """Seed-compatible driver: builds a ``FederatedEngine`` with the
+    default homogeneous fleet and a logging callback, then runs it."""
+    from repro.fl.callbacks import LoggingCallback
+    from repro.fl.engine import FederatedEngine
 
-    params = init_params if init_params is not None else \
-        model.init(jax.random.PRNGKey(fl.seed))
-    data = FederatedData(dataset.train, fl.num_clients, seed=fl.seed,
-                         noniid_alpha=fl.noniid_alpha)
-
-    # calibrate proxies at the baseline operating point (all layers active)
-    if resources is None:
-        from repro.core.freezing import count_params
-        p_all = count_params(params)
-        resources = calibrate(p_all, fl)
-
-    runner = ClientRunner(model, fl, data, resources)
-    evaluate = make_eval_fn(model, dataset, fl)
-    duals = init_duals if init_duals is not None else DualState()
-    result = FLResult(method=method)
-
-    for t in range(1, rounds + 1):
-        t0 = time.time()
-        val_loss = evaluate(params)
-        clients = rng.choice(fl.num_clients, size=fl.clients_per_round,
-                             replace=False)
-        knobs: Knobs = policy(duals, fl) if method == "cafl" else fedavg_knobs(fl)
-
-        deltas, usages, metrics = [], [], []
-        for cid in clients:
-            d, u, m = runner.local_train(int(cid), params, knobs)
-            deltas.append(d)
-            usages.append(u)
-            metrics.append(m)
-
-        mean_delta = aggregation.aggregate(deltas)
-        params = aggregation.apply_delta(params, mean_delta)
-
-        usage = {k: float(np.mean([u[k] for u in usages]))
-                 for k in usages[0]}
-        ratios = usage_ratios(usage, fl.budgets)
-        if method == "cafl":
-            duals = dual_update(duals, usage, fl.budgets, fl.duals)
-
-        rec = RoundRecord(
-            round=t, val_loss=val_loss, knobs=knobs.as_dict(), usage=usage,
-            ratios=ratios, duals=dict(duals.lam),
-            train_loss=float(np.mean([m["train_loss"] for m in metrics])),
-            wire_mb_actual=float(np.mean([m["wire_mb_actual"] for m in metrics])),
-            energy_true=float(np.mean([m["energy_true"] for m in metrics])),
-            seconds=time.time() - t0)
-        result.history.append(rec)
-        if log:
-            log(f"[{method}] round {t:3d} val={val_loss:.4f} "
-                f"knobs=(k={knobs.k},s={knobs.s},b={knobs.b},q={knobs.q},"
-                f"ga={knobs.grad_accum}) "
-                f"ratios=E{ratios['energy']:.2f}/C{ratios['comm']:.2f}/"
-                f"M{ratios['memory']:.2f}/T{ratios['temp']:.2f} "
-                f"lam=({duals.lam['energy']:.2f},{duals.lam['comm']:.2f},"
-                f"{duals.lam['memory']:.2f},{duals.lam['temp']:.2f}) "
-                f"{rec.seconds:.1f}s")
-
-    result.final_params = params
-    result.history[-1].val_loss = evaluate(params)
-    return result
+    engine = FederatedEngine(
+        model, fl, dataset,
+        strategy=method or fl.method,
+        callbacks=[LoggingCallback(log)] if log else [],
+        resources=resources,
+        init_duals=init_duals)
+    return engine.run(rounds=rounds, init_params=init_params)

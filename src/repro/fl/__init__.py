@@ -1,0 +1,29 @@
+"""Composable federated engine: Strategy x Executor x DeviceProfile x
+Callback, replacing the seed's monolithic ``run_federated``.
+
+    from repro.fl import FederatedEngine, CAFLL, BatchedExecutor
+
+    engine = FederatedEngine(model, fl, dataset, strategy="cafl",
+                             executor="batched",
+                             callbacks=[LoggingCallback()])
+    result = engine.run()
+
+The seed API (``repro.core.run_federated``) remains a thin wrapper.
+"""
+from repro.core.client import ClientResult, ClientRunner  # noqa: F401
+from repro.core.server import FLResult, RoundRecord  # noqa: F401
+from repro.fl.callbacks import (  # noqa: F401
+    CheckpointCallback, HistoryWriterCallback, LoggingCallback,
+    RoundCallback, TimingCallback,
+)
+from repro.fl.device import (  # noqa: F401
+    DEFAULT_PROFILE, ClientInfo, DeviceProfile, FleetClass, make_fleet,
+    uniform_fleet,
+)
+from repro.fl.engine import FederatedEngine  # noqa: F401
+from repro.fl.executor import (  # noqa: F401
+    BatchedExecutor, ClientExecutor, SequentialExecutor, make_executor,
+)
+from repro.fl.strategy import (  # noqa: F401
+    CAFLL, FedAvg, FederatedStrategy, ServerOpt, make_strategy,
+)

@@ -1,0 +1,81 @@
+"""Device profiles: per-client budgets + resource models.
+
+The paper evaluates one homogeneous fleet, but its framing ("constants
+can be adapted or re-scaled for specific device profiles", A.1) and the
+multi-resource-allocation related work assume devices differ. A
+``DeviceProfile`` carries a device class's budgets (Eq. 2 is then
+per-class) and its resource-model calibration; the engine maps every
+simulated client onto one profile so the CAFL-L duals/policy can run
+per device class.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import Budgets, FLConfig
+from repro.core.resources import ResourceModel
+
+DEFAULT_PROFILE = "default"
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """One device class in the fleet.
+
+    ``resources=None`` means "the engine's calibrated base model scaled
+    by ``compute_scale``" (>1 = less efficient silicon: more energy and
+    heat per token than the calibration device).
+    """
+    name: str
+    budgets: Budgets
+    resources: Optional[ResourceModel] = None
+    compute_scale: float = 1.0
+
+    def with_resources(self, base: ResourceModel) -> "DeviceProfile":
+        if self.resources is not None:
+            return self
+        return dataclasses.replace(
+            self, resources=base.scaled(energy=self.compute_scale,
+                                        temp=self.compute_scale))
+
+
+@dataclass(frozen=True)
+class ClientInfo:
+    """A sampled client as the strategy sees it."""
+    client_id: int
+    profile: DeviceProfile
+    shard_size: int = 0
+
+
+@dataclass(frozen=True)
+class FleetClass:
+    """Spec for one tier of a heterogeneous fleet."""
+    name: str
+    fraction: float               # share of clients in this tier
+    budget_scale: float = 1.0     # tier budgets = base budgets * scale
+    compute_scale: float = 1.0    # tier efficiency (see DeviceProfile)
+
+
+def uniform_fleet(fl: FLConfig) -> Tuple[Dict[str, DeviceProfile], List[str]]:
+    """The paper's setting: every client is the same device."""
+    profiles = {DEFAULT_PROFILE: DeviceProfile(DEFAULT_PROFILE, fl.budgets)}
+    return profiles, [DEFAULT_PROFILE] * fl.num_clients
+
+
+def make_fleet(fl: FLConfig, classes: Sequence[FleetClass]
+               ) -> Tuple[Dict[str, DeviceProfile], List[str]]:
+    """Partition ``fl.num_clients`` into device classes by fraction
+    (contiguous blocks, remainder to the last class)."""
+    assert classes, "need at least one FleetClass"
+    profiles = {
+        c.name: DeviceProfile(c.name, fl.budgets.scaled(c.budget_scale),
+                              compute_scale=c.compute_scale)
+        for c in classes}
+    assignment: List[str] = []
+    for c in classes[:-1]:
+        assignment += [c.name] * int(round(c.fraction * fl.num_clients))
+    assignment = assignment[:fl.num_clients]
+    assignment += [classes[-1].name] * (fl.num_clients - len(assignment))
+    return profiles, assignment

@@ -1,0 +1,190 @@
+"""The composable federated engine (Algorithm 1 as pure control flow).
+
+``FederatedEngine`` wires four independently replaceable pieces:
+
+    strategy  — FederatedStrategy: knobs / aggregation / dual state
+    executor  — ClientExecutor: how LocalTrain actually runs (sequential
+                Python loop vs one jitted vmap over stacked clients)
+    profiles  — DeviceProfile map: per-device-class budgets + resource
+                models (the paper's homogeneous fleet is the default)
+    callbacks — RoundCallback hooks for logging / checkpoints / timing
+
+``repro.core.server.run_federated`` is a thin wrapper over this class
+that preserves the seed API exactly.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import aggregation
+from repro.core.client import ClientRunner
+from repro.core.duals import RESOURCES, DualState, usage_ratios
+from repro.core.resources import ResourceModel, calibrate
+from repro.core.server import FLResult, RoundRecord, make_eval_fn
+from repro.data.federated import FederatedData
+from repro.data.shakespeare import CharDataset
+from repro.fl.callbacks import RoundCallback
+from repro.fl.device import (DEFAULT_PROFILE, ClientInfo, DeviceProfile,
+                             uniform_fleet)
+from repro.fl.executor import ClientExecutor, make_executor
+from repro.fl.strategy import FederatedStrategy, make_strategy
+from repro.models.zoo import Model
+
+ExecutorSpec = Union[str, Callable[[ClientRunner], ClientExecutor]]
+
+
+class FederatedEngine:
+    def __init__(self, model: Model, fl: FLConfig, dataset: CharDataset,
+                 strategy: Union[str, FederatedStrategy, None] = None,
+                 executor: Optional[ExecutorSpec] = None,
+                 profiles: Optional[Dict[str, DeviceProfile]] = None,
+                 client_profiles: Optional[Sequence[str]] = None,
+                 callbacks: Sequence[RoundCallback] = (),
+                 resources: Optional[ResourceModel] = None,
+                 init_duals: Optional[DualState] = None):
+        self.model = model
+        self.fl = fl
+        self.dataset = dataset
+        if strategy is None:
+            strategy = fl.method
+        self.strategy = (make_strategy(strategy, fl, init_duals=init_duals)
+                         if isinstance(strategy, str) else strategy)
+        self._executor_spec: ExecutorSpec = executor or fl.executor
+        if profiles is None:
+            profiles, client_profiles = uniform_fleet(fl)
+        assert client_profiles is not None and \
+            len(client_profiles) == fl.num_clients, \
+            "client_profiles must name a profile for every client"
+        self._profiles_raw = profiles
+        self._client_profiles = list(client_profiles)
+        self.callbacks = list(callbacks)
+        self._base_resources = resources
+
+        self.data = FederatedData(dataset.train, fl.num_clients, seed=fl.seed,
+                                  noniid_alpha=fl.noniid_alpha)
+        self.params = None            # live during run(); callbacks read it
+        self.profiles: Dict[str, DeviceProfile] = {}
+
+    # ------------------------------------------------------------------
+    def _setup(self, init_params):
+        fl = self.fl
+        params = init_params if init_params is not None else \
+            self.model.init(jax.random.PRNGKey(fl.seed))
+        # calibrate proxies at the baseline operating point (all layers
+        # active) and specialize per device profile
+        base = self._base_resources
+        if base is None:
+            from repro.core.freezing import count_params
+            base = calibrate(count_params(params), fl)
+        self.profiles = {name: p.with_resources(base)
+                         for name, p in self._profiles_raw.items()}
+        runner = ClientRunner(self.model, fl, self.data, base)
+        executor = (make_executor(self._executor_spec, runner)
+                    if isinstance(self._executor_spec, str)
+                    else self._executor_spec(runner))
+        return params, runner, executor
+
+    def _client_info(self, cid: int) -> ClientInfo:
+        profile = self.profiles[self._client_profiles[cid]]
+        return ClientInfo(client_id=cid, profile=profile,
+                          shard_size=self.data.shard_size(cid))
+
+    def _emit(self, hook: str, *args) -> None:
+        for cb in self.callbacks:
+            getattr(cb, hook)(self, *args)
+
+    # ------------------------------------------------------------------
+    def run(self, rounds: Optional[int] = None, init_params=None) -> FLResult:
+        fl = self.fl
+        rounds = rounds or fl.rounds
+        rng = np.random.default_rng(fl.seed)
+        params, runner, executor = self._setup(init_params)
+        evaluate = make_eval_fn(self.model, self.dataset, fl)
+        result = FLResult(method=self.strategy.name)
+        heterogeneous = len(self.profiles) > 1
+
+        self.params = params
+        self._emit("on_train_start")
+        for t in range(1, rounds + 1):
+            t0 = time.time()
+            self._emit("on_round_start", t)
+            val_loss = evaluate(params)
+            cids = rng.choice(fl.num_clients, size=fl.clients_per_round,
+                              replace=False)
+            clients = [self._client_info(int(c)) for c in cids]
+            knobs = self.strategy.configure_round(t, clients)
+
+            outs = executor.run_round(params, list(zip(clients, knobs)))
+
+            weights = [float(ci.shard_size) for ci in clients]
+            delta = self.strategy.aggregate([o.delta for o in outs], weights)
+            params = aggregation.apply_delta(params, delta)
+            self.params = params
+
+            usages = [ci.profile.resources.usage(o.params_active, kn)
+                      for ci, kn, o in zip(clients, knobs, outs)]
+            energy_true = [
+                ci.profile.resources.usage(o.params_active, kn,
+                                           include_accum=True)["energy"]
+                for ci, kn, o in zip(clients, knobs, outs)]
+            usage = {r: float(np.mean([u[r] for u in usages]))
+                     for r in RESOURCES}
+            ratios = usage_ratios(usage, fl.budgets)
+            duals_by_profile = self.strategy.update_state(usages, clients)
+
+            record = RoundRecord(
+                round=t, val_loss=val_loss, knobs=knobs[0].as_dict(),
+                usage=usage, ratios=ratios,
+                duals=_default_duals(duals_by_profile),
+                train_loss=float(np.mean([o.train_loss for o in outs])),
+                wire_mb_actual=float(np.mean([o.wire_mb_actual
+                                              for o in outs])),
+                energy_true=float(np.mean(energy_true)),
+                seconds=time.time() - t0,
+                per_profile=_per_profile_record(
+                    clients, knobs, usages, duals_by_profile)
+                if heterogeneous else {})
+            result.history.append(record)
+            self._emit("on_round_end", record)
+
+        result.final_params = params
+        result.history[-1].val_loss = evaluate(params)
+        self._emit("on_train_end", result)
+        return result
+
+
+def _default_duals(duals_by_profile: Dict[str, Dict[str, float]]
+                   ) -> Dict[str, float]:
+    """The record's back-compat scalar dual dict: the default profile's
+    duals, the sole profile's, or zeros (fedavg keeps no duals)."""
+    if DEFAULT_PROFILE in duals_by_profile:
+        return dict(duals_by_profile[DEFAULT_PROFILE])
+    if duals_by_profile:
+        return dict(next(iter(duals_by_profile.values())))
+    return {r: 0.0 for r in RESOURCES}
+
+
+def _per_profile_record(clients: List[ClientInfo], knobs, usages,
+                        duals_by_profile) -> Dict[str, Dict]:
+    out: Dict[str, Dict] = {}
+    for ci, kn, u in zip(clients, knobs, usages):
+        name = ci.profile.name
+        slot = out.setdefault(name, {"clients": 0, "knobs": kn.as_dict(),
+                                     "usage": {r: 0.0 for r in RESOURCES}})
+        slot["clients"] += 1
+        for r in RESOURCES:
+            slot["usage"][r] += u[r]
+    for name, slot in out.items():
+        n = slot["clients"]
+        slot["usage"] = {r: v / n for r, v in slot["usage"].items()}
+        profile = next(ci.profile for ci in clients
+                       if ci.profile.name == name)
+        slot["ratios"] = usage_ratios(slot["usage"], profile.budgets)
+        if name in duals_by_profile:
+            slot["duals"] = dict(duals_by_profile[name])
+    return out

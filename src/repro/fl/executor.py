@@ -1,0 +1,154 @@
+"""Client executors: how one round's LocalTrain workload actually runs.
+
+``SequentialExecutor`` keeps the seed semantics: a Python loop over
+clients driving ``ClientRunner.train_client`` (one jitted grad step per
+microbatch, one host sync per client).
+
+``BatchedExecutor`` groups clients that received the same knobs (same
+shapes), pre-samples every microbatch, and runs the whole group's local
+training as ONE jitted call: ``vmap`` over clients of a
+``lax.scan`` over local steps of a ``lax.scan`` over grad-accum
+microbatches. That removes the per-client Python dispatch and every
+intermediate host sync — the only transfer per group is the stacked
+deltas and losses coming back.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.client import (ClientResult, ClientRunner,
+                               _masked_wire_mb, apply_masked_update)
+from repro.core.policy import Knobs
+from repro.fl.device import ClientInfo
+
+Assignment = Tuple[ClientInfo, Knobs]
+
+
+class ClientExecutor:
+    """Protocol: run one round of LocalTrain for the sampled clients."""
+
+    def run_round(self, params, assignments: Sequence[Assignment]
+                  ) -> List[ClientResult]:
+        raise NotImplementedError
+
+
+class SequentialExecutor(ClientExecutor):
+    """Seed semantics: clients one after another through the shared
+    jitted step cache."""
+
+    def __init__(self, runner: ClientRunner):
+        self.runner = runner
+
+    def run_round(self, params, assignments):
+        return [self.runner.train_client(ci.client_id, params, kn)
+                for ci, kn in assignments]
+
+
+class BatchedExecutor(ClientExecutor):
+    """Same-knob clients stacked and trained in a single jitted
+    vmap-of-scan call. Numerically matches the sequential path up to
+    float reassociation (same batches, same update math)."""
+
+    def __init__(self, runner: ClientRunner):
+        self.runner = runner
+        self._batched = jax.jit(jax.vmap(self._one_client,
+                                         in_axes=(None, None, 0)))
+
+    def _one_client(self, params, mask, batches):
+        """LocalTrain for one client; ``batches`` leaves are shaped
+        (s, grad_accum, b, seq). vmapped over a leading client axis."""
+        opt = self.runner.opt
+        ga = jax.tree.leaves(batches)[0].shape[1]
+        loss_fn = self.runner.model.train_loss
+
+        def local_step(carry, micros):
+            w, opt_state = carry
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), w)
+
+            def accum(c, mb):
+                gsum, lsum = c
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    w, mb)
+                gsum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                    gsum, grads)
+                return (gsum, lsum + loss.astype(jnp.float32)), None
+
+            (gsum, lsum), _ = jax.lax.scan(
+                accum, (zeros, jnp.zeros((), jnp.float32)), micros)
+            grads = jax.tree.map(lambda g: g / ga, gsum)
+            w, opt_state = apply_masked_update(opt, w, opt_state, grads, mask)
+            return (w, opt_state), lsum / ga
+
+        opt_state = opt.init(params)
+        (w, _), losses = jax.lax.scan(local_step, (params, opt_state), batches)
+        delta = jax.tree.map(lambda a, b_: a.astype(jnp.float32)
+                             - b_.astype(jnp.float32), w, params)
+        return delta, jnp.mean(losses)
+
+    def _stack_batches(self, cids: Sequence[int], kn: Knobs):
+        """Pre-sample every microbatch for the group, in the same
+        (client, step, micro) order the sequential path draws them, and
+        stack to leaves of shape (C, s, grad_accum, b, seq)."""
+        per_key: Dict[str, list] = {}
+        for cid in cids:
+            rows: Dict[str, list] = {}
+            for _ in range(kn.s):
+                for _ in range(kn.grad_accum):
+                    batch = self.runner.data.batch(cid, kn.b,
+                                                   self.runner.fl.seq_len)
+                    for key, arr in batch.items():
+                        rows.setdefault(key, []).append(arr)
+            for key, arrs in rows.items():
+                stacked = np.stack(arrs).reshape(
+                    (kn.s, kn.grad_accum) + arrs[0].shape)
+                per_key.setdefault(key, []).append(stacked)
+        return {key: jnp.asarray(np.stack(arrs))
+                for key, arrs in per_key.items()}
+
+    def run_round(self, params, assignments):
+        # group client indices by knobs; same knobs => same shapes
+        groups: Dict[Knobs, List[int]] = {}
+        for idx, (_, kn) in enumerate(assignments):
+            groups.setdefault(kn, []).append(idx)
+
+        results: List[ClientResult] = [None] * len(assignments)  # type: ignore
+        for kn, idxs in groups.items():
+            cids = [assignments[i][0].client_id for i in idxs]
+            mask, active = self.runner.mask_for(params, kn.k)
+            batches = self._stack_batches(cids, kn)
+            deltas, losses = self._batched(params, mask, batches)
+            losses = np.asarray(losses)
+            for row, i in enumerate(idxs):
+                raw = jax.tree.map(lambda l, r=row: l[r], deltas)
+                delta = _compress(raw, mask, kn.q)
+                results[i] = ClientResult(
+                    client_id=cids[row], delta=delta, params_active=active,
+                    train_loss=float(losses[row]),
+                    wire_mb_actual=_masked_wire_mb(delta, mask, kn.q))
+        return results
+
+
+def _compress(raw_delta, mask, q: int):
+    """Wire-compress an already-computed fp32 delta (the batched path
+    computes w - params on device; only the q knob remains)."""
+    from repro.core import compression, freezing
+    delta = compression.compress_decompress(raw_delta, q)
+    return freezing.apply_mask(delta, mask)
+
+
+EXECUTORS = {
+    "sequential": SequentialExecutor,
+    "batched": BatchedExecutor,
+}
+
+
+def make_executor(name: str, runner: ClientRunner) -> ClientExecutor:
+    try:
+        return EXECUTORS[name](runner)
+    except KeyError:
+        raise ValueError(f"unknown executor {name!r}; "
+                         f"options: {sorted(EXECUTORS)}") from None

@@ -1,0 +1,172 @@
+"""Federated strategies: who trains with what knobs, and how updates merge.
+
+A ``FederatedStrategy`` answers the three server-side questions of
+Algorithm 1, each independently replaceable:
+
+    configure_round(rnd, clients) -> per-client Knobs      (lines 5-8)
+    aggregate(deltas, weights)    -> server update tree    (line 15)
+    update_state(usages, clients) -> per-profile duals     (line 17)
+
+``FedAvg`` fixes the knobs and averages; ``CAFLL`` runs the paper's
+Lagrangian loop with one dual state *per device profile*; ``ServerOpt``
+wraps any strategy with a FedOpt-family server optimizer (FedAvgM /
+FedAdam) on the aggregated pseudo-gradient, proving the aggregation
+axis composes.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+
+from repro.configs.base import FLConfig
+from repro.core import aggregation
+from repro.core.duals import RESOURCES, DualState, dual_update
+from repro.core.policy import Knobs, fedavg_knobs, policy
+from repro.fl.device import DEFAULT_PROFILE, ClientInfo
+from repro.optim import adam, make_optimizer
+
+
+class FederatedStrategy:
+    """Base strategy: plain-mean aggregation, no state. Subclasses
+    override any subset of the three hooks."""
+
+    name = "base"
+
+    def configure_round(self, rnd: int, clients: Sequence[ClientInfo]
+                        ) -> List[Knobs]:
+        raise NotImplementedError
+
+    def aggregate(self, deltas: Sequence, weights: Optional[List[float]] = None):
+        """Merge client deltas into the server update. ``weights`` are the
+        clients' shard sizes; the base strategy ignores them (the paper
+        aggregates participating clients with a plain mean)."""
+        return aggregation.aggregate(deltas)
+
+    def update_state(self, usages: Sequence[Dict[str, float]],
+                     clients: Sequence[ClientInfo]) -> Dict[str, Dict[str, float]]:
+        """Consume the round's per-client usage; returns the per-profile
+        dual snapshot for logging ({} when the strategy keeps no duals)."""
+        return {}
+
+    def duals_snapshot(self) -> Dict[str, Dict[str, float]]:
+        return {}
+
+
+class FedAvg(FederatedStrategy):
+    """The baseline: fixed knobs, no compression, no adaptation.
+    ``weighted=True`` gives the |D_i|-weighted variant (Eq. 1)."""
+
+    name = "fedavg"
+
+    def __init__(self, fl: FLConfig, weighted: bool = False):
+        self.fl = fl
+        self.weighted = weighted
+
+    def configure_round(self, rnd, clients):
+        kn = fedavg_knobs(self.fl)
+        return [kn] * len(clients)
+
+    def aggregate(self, deltas, weights=None):
+        return aggregation.aggregate(deltas, weights if self.weighted else None)
+
+
+class CAFLL(FederatedStrategy):
+    """The paper's constraint-aware loop, generalized to heterogeneous
+    fleets: one ``DualState`` per device profile, updated against that
+    profile's budgets with the mean usage of its sampled clients."""
+
+    name = "cafl"
+
+    def __init__(self, fl: FLConfig, init_duals: Optional[DualState] = None):
+        self.fl = fl
+        self.duals: Dict[str, DualState] = {}
+        if init_duals is not None:
+            self.duals[DEFAULT_PROFILE] = init_duals
+
+    def duals_for(self, profile_name: str) -> DualState:
+        return self.duals.setdefault(profile_name, DualState())
+
+    def configure_round(self, rnd, clients):
+        per_profile = {}
+        for ci in clients:
+            name = ci.profile.name
+            if name not in per_profile:
+                per_profile[name] = policy(self.duals_for(name), self.fl)
+        return [per_profile[ci.profile.name] for ci in clients]
+
+    def update_state(self, usages, clients):
+        by_profile: Dict[str, list] = {}
+        for u, ci in zip(usages, clients):
+            by_profile.setdefault(ci.profile.name, []).append((u, ci.profile))
+        for name, entries in by_profile.items():
+            us = [u for u, _ in entries]
+            profile = entries[0][1]
+            mean = {r: sum(u[r] for u in us) / len(us) for r in RESOURCES}
+            self.duals[name] = dual_update(self.duals_for(name), mean,
+                                           profile.budgets, self.fl.duals)
+        return self.duals_snapshot()
+
+    def duals_snapshot(self):
+        return {name: dict(st.lam) for name, st in self.duals.items()}
+
+
+class ServerOpt(FederatedStrategy):
+    """FedOpt-family wrapper: treat the inner strategy's aggregate as a
+    pseudo-gradient and run a server optimizer over it (Reddi et al.,
+    "Adaptive Federated Optimization"). ``optimizer="momentum"`` is
+    FedAvgM, ``"adam"`` is FedAdam."""
+
+    def __init__(self, inner: FederatedStrategy, optimizer: str = "adam",
+                 lr: float = 0.1, eps: float = 0.1):
+        self.inner = inner
+        # FedAdam needs a LARGE adaptivity eps (the FedOpt paper's tau,
+        # ~1e-3..1e-1): with the adam default 1e-8 the server step
+        # degrades to sign descent of magnitude lr per coordinate and
+        # diverges on pseudo-gradients this small.
+        self.opt = (adam(lr, eps=eps) if optimizer == "adam"
+                    else make_optimizer(optimizer, lr))
+        self.name = f"{inner.name}+{optimizer}"
+        self._state = None
+
+    def configure_round(self, rnd, clients):
+        return self.inner.configure_round(rnd, clients)
+
+    def aggregate(self, deltas, weights=None):
+        mean = self.inner.aggregate(deltas, weights)
+        # pseudo-gradient g = -delta; optimizer returns the descent update
+        g = jax.tree.map(lambda d: -d, mean)
+        if self._state is None:
+            self._state = self.opt.init(g)
+        updates, self._state = self.opt.update(g, self._state, g)
+        return updates
+
+    def update_state(self, usages, clients):
+        return self.inner.update_state(usages, clients)
+
+    def duals_snapshot(self):
+        return self.inner.duals_snapshot()
+
+
+def make_strategy(method: str, fl: FLConfig,
+                  init_duals: Optional[DualState] = None) -> FederatedStrategy:
+    """Resolve a method string: "fedavg", "cafl", "fedavg_weighted",
+    "fedadam", "fedavgm", or any base composed as "<base>+adam" /
+    "<base>+momentum" (e.g. "cafl+adam"). ``fl.server_opt`` composes the
+    same wrapper onto a plain method name."""
+    name = method.lower()
+    aliases = {"fedadam": "fedavg+adam", "fedavgm": "fedavg+momentum"}
+    name = aliases.get(name, name)
+    base_name, _, server = name.partition("+")
+    if base_name == "fedavg":
+        base: FederatedStrategy = FedAvg(fl)
+    elif base_name == "fedavg_weighted":
+        base = FedAvg(fl, weighted=True)
+    elif base_name == "cafl":
+        base = CAFLL(fl, init_duals=init_duals)
+    else:
+        raise ValueError(f"unknown federated method: {method!r}")
+    server = server or fl.server_opt
+    if server:
+        base = ServerOpt(base, optimizer=server, lr=fl.server_lr)
+    return base

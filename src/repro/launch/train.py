@@ -1,37 +1,34 @@
-"""FL training driver (the paper's experiment).
+"""FL training driver (the paper's experiment), on the composable engine.
 
     PYTHONPATH=src python -m repro.launch.train --method both \
         --rounds 25 --out results/fl
 
 Writes <out>_<method>.json (round-by-round history) and
-<out>_<method>.ckpt (final params).
+<out>_<method>.ckpt (final params) via engine callbacks.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
 import os
 
-from repro.checkpointing import save
 from repro.configs import get_config, get_fl_config
-from repro.core import run_federated
 from repro.data import load_corpus
+from repro.fl import (CheckpointCallback, FederatedEngine,
+                      HistoryWriterCallback, LoggingCallback)
 from repro.models import build
-
-
-def history_to_json(result):
-    return {
-        "method": result.method,
-        "summary": result.summary(),
-        "history": [dataclasses.asdict(r) for r in result.history],
-    }
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="charlm-shakespeare")
-    ap.add_argument("--method", default="both", choices=["cafl", "fedavg", "both"])
+    ap.add_argument("--method", default="both",
+                    help='"cafl", "fedavg", "both", or any strategy name '
+                         'the engine resolves (e.g. "fedadam", "cafl+adam")')
+    ap.add_argument("--executor", default="sequential",
+                    choices=["sequential", "batched"])
+    ap.add_argument("--server-opt", default="",
+                    help='server optimizer composed onto the method '
+                         '("adam" = FedAdam, "momentum" = FedAvgM)')
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--seed", type=int, default=None)
     ap.add_argument("--out", default="results/fl")
@@ -42,22 +39,26 @@ def main(argv=None) -> None:
     cfg = get_config(args.arch)
     if cfg.vocab_size < ds.vocab_size:
         cfg = cfg.replace(vocab_size=ds.vocab_size)
-    fl = get_fl_config()
+    fl = get_fl_config().replace(executor=args.executor,
+                                 server_opt=args.server_opt)
     if args.rounds:
         fl = fl.replace(rounds=args.rounds)
     if args.seed is not None:
         fl = fl.replace(seed=args.seed)
     model = build(cfg)
-    os.makedirs(os.path.dirname(os.path.abspath(args.out)) or ".", exist_ok=True)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)) or ".",
+                exist_ok=True)
 
     methods = ["fedavg", "cafl"] if args.method == "both" else [args.method]
-    log = (lambda *a, **k: None) if args.quiet else print
     for method in methods:
-        result = run_federated(model, fl, ds, method=method, log=log)
         path = f"{args.out}_{method}.json"
-        with open(path, "w") as f:
-            json.dump(history_to_json(result), f, indent=1)
-        save(f"{args.out}_{method}.ckpt", result.final_params)
+        callbacks = [HistoryWriterCallback(path),
+                     CheckpointCallback(f"{args.out}_{method}.ckpt")]
+        if not args.quiet:
+            callbacks.append(LoggingCallback())
+        engine = FederatedEngine(model, fl, ds, strategy=method,
+                                 callbacks=callbacks)
+        result = engine.run()
         print(f"[{method}] saved {path}; summary:", result.summary())
 
 

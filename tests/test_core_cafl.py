@@ -78,6 +78,40 @@ def test_token_budget_preservation():
             assert s * b * (ga - 1) < t_target     # minimal accum (Eq. 8)
 
 
+def test_token_budget_accum_edges():
+    t_target = FL.s_base * FL.b_base
+    # at or above the token target -> no accumulation
+    assert token_budget_accum(FL, FL.s_base, FL.b_base) == 1
+    assert token_budget_accum(FL, FL.s_base * 2, FL.b_base) == 1
+    assert token_budget_accum(FL, FL.s_base + 1, FL.b_base) == 1
+    # ablation: token_budget=False always yields 1
+    fl_off = FL.replace(token_budget=False)
+    for s, b in ((1, 1), (10, 8), (40, 32)):
+        assert token_budget_accum(fl_off, s, b) == 1
+    # tiny s*b -> ceil to the full target
+    assert token_budget_accum(FL, 1, 1) == t_target
+    assert token_budget_accum(FL, 1, 2) == -(-t_target // 2)
+
+
+def test_aggregate_weighted():
+    import jax.numpy as jnp
+    from repro.core import aggregation
+    deltas = [{"w": jnp.ones(4)}, {"w": jnp.full(4, 5.0)}]
+    # plain mean
+    mean = aggregation.aggregate(deltas)
+    np.testing.assert_allclose(np.asarray(mean["w"]), 3.0)
+    # |D_i|-weighted (weights normalize; scale-invariant)
+    for weights in ([1.0, 3.0], [10.0, 30.0]):
+        w = aggregation.aggregate(deltas, weights)
+        np.testing.assert_allclose(np.asarray(w["w"]), 4.0)
+    # single client passes through
+    one = aggregation.aggregate(deltas[:1])
+    np.testing.assert_allclose(np.asarray(one["w"]), 1.0)
+    # structure preserved
+    import jax
+    assert (jax.tree.structure(mean) == jax.tree.structure(deltas[0]))
+
+
 def test_calibration_matches_table1_fedavg_row():
     res = calibrate(1.9e6, FL)
     kn = fedavg_knobs(FL)

@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import ops, ref
 from repro.kernels.quantize import ROWS_PER_TILE, dequantize_blocks, quantize_blocks
