@@ -1,5 +1,8 @@
 """Executor micro-benchmark: sequential Python loop vs the batched
-(jit + vmap-of-scan) LocalTrain path, same tiny char-LM round.
+(jit + vmap-of-scan) LocalTrain path, same tiny char-LM round — plus a
+fleet-dynamics configuration (uniform K-of-N sampling with deadline
+stragglers) showing the engine-level round cost of partial
+participation vs the full static fleet.
 
     PYTHONPATH=src:. python benchmarks/fl_engine_bench.py
 
@@ -61,6 +64,41 @@ def rows():
                     f"{fl.clients_per_round}clients*s{knobs.s}*b{knobs.b}"))
     out.append(("fl.executor.batched_speedup", 0.0,
                 f"{timings['sequential'] / timings['batched']:.2f}x"))
+    out += _dynamics_rows(model, fl, ds)
+    return out
+
+
+def _dynamics_rows(model, fl, ds):
+    """Engine-level rounds: static full cohort vs K-of-N sampling with
+    deadline stragglers (survivor-only execution means dropped clients
+    cost the simulator nothing). Reported as the mean round time
+    *including* jit retraces — under dynamics the survivor-group size
+    and CAFL knob shapes change between rounds, so retracing is part of
+    the scenario's real cost, not warmup to be excluded."""
+    from repro.fl import (DeadlineStragglers, FederatedEngine, FleetDynamics,
+                          FullParticipation, TimingCallback, UniformSampler)
+
+    fl_bench = fl.replace(rounds=4, eval_batches=1, eval_batch_size=16,
+                          clients_per_round=4)
+    scenarios = {
+        "full": FleetDynamics(sampler=FullParticipation()),
+        "sampled": FleetDynamics(
+            sampler=UniformSampler(fl_bench.clients_per_round),
+            stragglers=DeadlineStragglers.for_config(fl_bench, deadline=2.0,
+                                                     jitter=0.3)),
+    }
+    out = []
+    for name, dyn in scenarios.items():
+        timing = TimingCallback()
+        res = FederatedEngine(model, fl_bench, ds, strategy="cafl",
+                              executor="batched", dynamics=dyn,
+                              callbacks=[timing]).run()
+        seconds = timing.round_seconds[1:]           # drop first compile
+        mean = sum(seconds) / len(seconds)
+        parts = sum(len(r.participants) for r in res.history)
+        drops = sum(len(r.dropped) for r in res.history)
+        out.append((f"fl.engine.{name}.round_mean", mean * 1e6,
+                    f"{parts}reported+{drops}dropped,incl-retraces"))
     return out
 
 

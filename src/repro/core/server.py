@@ -41,6 +41,16 @@ class RoundRecord:
     seconds: float
     # per-device-class breakdown; empty for a homogeneous fleet
     per_profile: Dict[str, Dict] = field(default_factory=dict)
+    # --- fleet dynamics (repro.fl.dynamics) ---
+    # clients that reported before the deadline (their usages drive the
+    # dual update and their deltas the aggregate)
+    participants: List[int] = field(default_factory=list)
+    # sampled clients that missed the round deadline (token budget
+    # carried to their next participation)
+    dropped: List[int] = field(default_factory=list)
+    # fleet size the round could see after availability gating
+    # (-1 = record predates fleet dynamics)
+    num_available: int = -1
 
 
 @dataclass

@@ -20,6 +20,12 @@ from repro.fl.device import (  # noqa: F401
     DEFAULT_PROFILE, ClientInfo, DeviceProfile, FleetClass, make_fleet,
     uniform_fleet,
 )
+from repro.fl.dynamics import (  # noqa: F401
+    AlwaysAvailable, AvailabilityModel, BernoulliChurn, ClientSampler,
+    DeadlineStragglers, FleetDynamics, FullParticipation, NoStragglers,
+    PeriodicAvailability, ResourceAwareSampler, RoundPlan,
+    RoundRobinSampler, StragglerModel, UniformSampler, make_dynamics,
+)
 from repro.fl.engine import FederatedEngine  # noqa: F401
 from repro.fl.executor import (  # noqa: F401
     BatchedExecutor, ClientExecutor, SequentialExecutor, make_executor,

@@ -23,6 +23,11 @@ class RoundCallback:
     def on_round_start(self, engine, rnd: int) -> None:
         pass
 
+    def on_round_composed(self, engine, plan) -> None:
+        """Fires once the round's fleet composition is fixed: ``plan``
+        is a ``repro.fl.dynamics.RoundPlan`` (available / sampled /
+        survivors / dropped client ids + straggler time draws)."""
+
     def on_round_end(self, engine, record) -> None:
         pass
 
@@ -38,7 +43,12 @@ class LoggingCallback(RoundCallback):
 
     def on_round_end(self, engine, r) -> None:
         kn, rat, lam = r.knobs, r.ratios, r.duals
-        self.log(
+        if not kn:          # dynamics left the round with no cohort
+            self.log(f"[{engine.strategy.name}] round {r.round:3d} "
+                     f"val={r.val_loss:.4f} no clients reachable "
+                     f"(available={r.num_available}) {r.seconds:.1f}s")
+            return
+        line = (
             f"[{engine.strategy.name}] round {r.round:3d} "
             f"val={r.val_loss:.4f} "
             f"knobs=(k={kn['k']},s={kn['s']},b={kn['b']},q={kn['q']},"
@@ -48,6 +58,10 @@ class LoggingCallback(RoundCallback):
             f"lam=({lam['energy']:.2f},{lam['comm']:.2f},"
             f"{lam['memory']:.2f},{lam['temp']:.2f}) "
             f"{r.seconds:.1f}s")
+        if r.dropped:       # seed format preserved unless dynamics bite
+            line += (f" part={len(r.participants)}/{len(r.participants) + len(r.dropped)}"
+                     f" drop={len(r.dropped)}")
+        self.log(line)
 
 
 class CheckpointCallback(RoundCallback):

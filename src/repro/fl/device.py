@@ -26,12 +26,16 @@ class DeviceProfile:
 
     ``resources=None`` means "the engine's calibrated base model scaled
     by ``compute_scale``" (>1 = less efficient silicon: more energy and
-    heat per token than the calibration device).
+    heat per token than the calibration device). ``availability`` is the
+    class's steady-state reachability (fraction of rounds a device of
+    this class answers the server) — ``repro.fl.dynamics`` churn models
+    read it; the engine itself never gates on it.
     """
     name: str
     budgets: Budgets
     resources: Optional[ResourceModel] = None
     compute_scale: float = 1.0
+    availability: float = 1.0
 
     def with_resources(self, base: ResourceModel) -> "DeviceProfile":
         if self.resources is not None:
@@ -56,6 +60,7 @@ class FleetClass:
     fraction: float               # share of clients in this tier
     budget_scale: float = 1.0     # tier budgets = base budgets * scale
     compute_scale: float = 1.0    # tier efficiency (see DeviceProfile)
+    availability: float = 1.0     # tier reachability (see DeviceProfile)
 
 
 def uniform_fleet(fl: FLConfig) -> Tuple[Dict[str, DeviceProfile], List[str]]:
@@ -71,7 +76,8 @@ def make_fleet(fl: FLConfig, classes: Sequence[FleetClass]
     assert classes, "need at least one FleetClass"
     profiles = {
         c.name: DeviceProfile(c.name, fl.budgets.scaled(c.budget_scale),
-                              compute_scale=c.compute_scale)
+                              compute_scale=c.compute_scale,
+                              availability=c.availability)
         for c in classes}
     assignment: List[str] = []
     for c in classes[:-1]:

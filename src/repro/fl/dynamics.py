@@ -1,0 +1,442 @@
+"""Fleet dynamics: who *can* train, who is picked, and who finishes.
+
+The paper's experiments assume a fully-participating, always-available
+homogeneous fleet; the multi-resource-allocation related work treats
+partial participation, stragglers and dropout as the defining condition
+of on-device FL. This module makes round composition an explicit,
+per-round process instead of the engine's implicit "all sampled clients
+always finish" loop:
+
+    AvailabilityModel  -- which clients a round can even see (charge /
+                          idle windows, Bernoulli churn)
+    ClientSampler      -- which available clients the server picks
+                          (full, uniform K-of-N, round-robin,
+                          resource-aware by dual-adjusted headroom)
+    StragglerModel     -- which picked clients report before the round
+                          deadline (wall-clock draws scaled by the
+                          device profile's ``compute_scale``)
+
+``FleetDynamics`` bundles the three plus the carry-over ledger that
+re-credits a dropped client's lost token budget (paper Eq. 8 spirit) at
+its next participation via extra gradient accumulation.
+
+Determinism contract: every model draws only from the generator the
+engine hands it, so the same ``fl.seed`` yields the same participation
+sets. The default bundle (always available, uniform K-of-N, no
+stragglers) consumes the generator exactly like the PR-1 engine's
+``rng.choice(num_clients, size=clients_per_round, replace=False)`` —
+full-participation configs reproduce earlier trajectories bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.policy import Knobs
+from repro.fl.device import ClientInfo
+
+# ---------------------------------------------------------------------------
+# availability
+# ---------------------------------------------------------------------------
+
+
+class AvailabilityModel:
+    """Gate: the subset of the fleet a round can even see."""
+
+    name = "base"
+
+    def available(self, rnd: int, clients: Sequence[ClientInfo],
+                  rng: np.random.Generator) -> List[ClientInfo]:
+        raise NotImplementedError
+
+
+class AlwaysAvailable(AvailabilityModel):
+    """The paper's setting: every client answers every round. Consumes
+    no randomness, so it is stream-transparent."""
+
+    name = "always"
+
+    def available(self, rnd, clients, rng):
+        return list(clients)
+
+
+class PeriodicAvailability(AvailabilityModel):
+    """Deterministic charge/idle windows: client ``i`` is reachable for
+    ``on_rounds`` out of every ``period`` rounds, phase-staggered by its
+    id so the fleet never goes dark all at once. ``per_profile`` maps a
+    profile name to its own ``(period, on_rounds)`` window (e.g. low-end
+    phones charge less often than plugged-in tablets)."""
+
+    name = "periodic"
+
+    def __init__(self, period: int = 4, on_rounds: int = 2,
+                 per_profile: Optional[Dict[str, Tuple[int, int]]] = None):
+        assert period >= 1 and 1 <= on_rounds <= period
+        self.period = period
+        self.on_rounds = on_rounds
+        self.per_profile = per_profile or {}
+
+    def _window(self, ci: ClientInfo) -> Tuple[int, int]:
+        return self.per_profile.get(ci.profile.name,
+                                    (self.period, self.on_rounds))
+
+    def is_available(self, rnd: int, ci: ClientInfo) -> bool:
+        period, on = self._window(ci)
+        return (rnd + ci.client_id) % period < on
+
+    def available(self, rnd, clients, rng):
+        return [ci for ci in clients if self.is_available(rnd, ci)]
+
+
+class BernoulliChurn(AvailabilityModel):
+    """Independent per-round churn: client ``i`` answers with probability
+    ``p * profile.availability`` (``per_profile`` overrides the product
+    per device class). One uniform draw per client per round."""
+
+    name = "bernoulli"
+
+    def __init__(self, p: float = 1.0,
+                 per_profile: Optional[Dict[str, float]] = None):
+        assert 0.0 <= p <= 1.0
+        self.p = p
+        self.per_profile = per_profile or {}
+
+    def prob(self, ci: ClientInfo) -> float:
+        if ci.profile.name in self.per_profile:
+            return self.per_profile[ci.profile.name]
+        return self.p * ci.profile.availability
+
+    def available(self, rnd, clients, rng):
+        draws = rng.random(len(clients))
+        return [ci for ci, u in zip(clients, draws) if u < self.prob(ci)]
+
+
+# ---------------------------------------------------------------------------
+# client sampling
+# ---------------------------------------------------------------------------
+
+
+class ClientSampler:
+    """Picks this round's cohort from the available clients. ``duals``
+    is the strategy's per-profile dual snapshot ({} for dual-free
+    strategies) so samplers can be constraint-aware."""
+
+    name = "base"
+
+    def reset(self) -> None:
+        pass
+
+    def sample(self, rnd: int, available: Sequence[ClientInfo],
+               rng: np.random.Generator,
+               duals: Dict[str, Dict[str, float]]) -> List[ClientInfo]:
+        raise NotImplementedError
+
+
+class FullParticipation(ClientSampler):
+    """Every available client trains (cross-silo style)."""
+
+    name = "full"
+
+    def sample(self, rnd, available, rng, duals):
+        return list(available)
+
+
+class UniformSampler(ClientSampler):
+    """Uniform K-of-N without replacement. With every client available
+    this draws ``rng.choice(N, size=K, replace=False)`` — the exact call
+    (and generator consumption) of the PR-1 engine loop."""
+
+    name = "uniform"
+
+    def __init__(self, k: int):
+        assert k >= 1
+        self.k = k
+
+    def sample(self, rnd, available, rng, duals):
+        if len(available) < self.k:
+            return list(available)
+        idx = rng.choice(len(available), size=self.k, replace=False)
+        return [available[int(i)] for i in idx]
+
+
+class RoundRobinSampler(ClientSampler):
+    """Deterministic fair rotation: a cyclic cursor over client ids;
+    each round takes the next ``k`` available clients in id order. No
+    randomness consumed — useful as a fully reproducible schedule."""
+
+    name = "round_robin"
+
+    def __init__(self, k: int):
+        assert k >= 1
+        self.k = k
+        self._cursor = 0
+
+    def reset(self) -> None:
+        self._cursor = 0
+
+    def sample(self, rnd, available, rng, duals):
+        if not available:
+            return []
+        ordered = sorted(available, key=lambda ci: ci.client_id)
+        # rotate so the scan starts just past the last cohort's end
+        start = 0
+        for i, ci in enumerate(ordered):
+            if ci.client_id >= self._cursor:
+                start = i
+                break
+        picked = [ordered[(start + j) % len(ordered)]
+                  for j in range(min(self.k, len(ordered)))]
+        self._cursor = (picked[-1].client_id + 1) if picked else 0
+        return picked
+
+
+class ResourceAwareSampler(ClientSampler):
+    """Prefers clients whose device class has dual-adjusted headroom:
+    score = sum_r lambda_r of the client's profile (high duals = the
+    class is pressed against its budgets), pick the ``k`` lowest scores
+    with random tie-breaking. With no duals yet (round 1, or FedAvg)
+    this degrades to uniform K-of-N.
+
+    ``explore`` reserves a fraction of the cohort for uniform sampling:
+    CAFL-L duals only move for profiles that report, so a purely greedy
+    sampler would freeze a pressed tier out forever (its high duals
+    never decay because it is never sampled again). The explore slots
+    guarantee every tier keeps feeding the dual update.
+    """
+
+    name = "resource_aware"
+
+    def __init__(self, k: int, explore: float = 0.25):
+        assert k >= 1 and 0.0 <= explore <= 1.0
+        self.k = k
+        self.explore = explore
+
+    @staticmethod
+    def pressure(ci: ClientInfo,
+                 duals: Dict[str, Dict[str, float]]) -> float:
+        lam = duals.get(ci.profile.name)
+        return float(sum(lam.values())) if lam else 0.0
+
+    def sample(self, rnd, available, rng, duals):
+        if len(available) <= self.k:
+            return list(available)
+        n_explore = math.ceil(self.k * self.explore) if self.explore else 0
+        perm = [int(i) for i in rng.permutation(len(available))]
+        picked = perm[:n_explore]                    # uniform explore slots
+        rest = perm[n_explore:]
+        # stable sort over a random permutation = random tie-breaks
+        order = sorted(rest,
+                       key=lambda i: self.pressure(available[i], duals))
+        picked += order[:self.k - n_explore]
+        return [available[i] for i in picked]
+
+
+# ---------------------------------------------------------------------------
+# stragglers
+# ---------------------------------------------------------------------------
+
+
+class StragglerModel:
+    """Decides which sampled clients report before the round deadline.
+    ``split`` returns (survivor_idx, dropped_idx, times) as positions
+    into the sampled cohort; ``times`` are the simulated wall-clock
+    draws (empty when the model keeps none)."""
+
+    name = "base"
+
+    def split(self, rnd: int, sampled: Sequence[ClientInfo],
+              knobs: Sequence[Knobs], rng: np.random.Generator
+              ) -> Tuple[List[int], List[int], List[float]]:
+        raise NotImplementedError
+
+
+class NoStragglers(StragglerModel):
+    """Every sampled client finishes. Consumes no randomness."""
+
+    name = "none"
+
+    def split(self, rnd, sampled, knobs, rng):
+        return list(range(len(sampled))), [], []
+
+
+class DeadlineStragglers(StragglerModel):
+    """Per-client wall-clock draw vs a fixed round deadline.
+
+    The draw is ``compute_scale * (s * grad_accum * b) / work_unit``
+    times a log-normal jitter — i.e. time 1.0 is one baseline round
+    (``work_unit = s_base * b_base`` sequences) on calibration silicon.
+    Clients whose draw exceeds ``deadline`` trained but never reported:
+    the server aggregates only survivors and their token budget is
+    carried to their next participation by ``FleetDynamics``.
+    """
+
+    name = "deadline"
+
+    def __init__(self, deadline: float, jitter: float = 0.25,
+                 work_unit: float = 1.0):
+        assert deadline >= 0.0 and jitter >= 0.0 and work_unit > 0
+        self.deadline = deadline
+        self.jitter = jitter
+        self.work_unit = work_unit
+
+    @classmethod
+    def for_config(cls, fl: FLConfig, deadline: float = 1.5,
+                   jitter: float = 0.25) -> "DeadlineStragglers":
+        """Deadline in units of baseline-knob rounds on the calibration
+        device (deadline=1.5 drops anything >1.5x slower than that)."""
+        return cls(deadline, jitter, work_unit=float(fl.s_base * fl.b_base))
+
+    def draw_times(self, sampled, knobs, rng) -> List[float]:
+        noise = (np.exp(rng.normal(0.0, self.jitter, size=len(sampled)))
+                 if self.jitter > 0 else np.ones(len(sampled)))
+        return [float(ci.profile.compute_scale
+                      * (kn.s * kn.grad_accum * kn.b) / self.work_unit * z)
+                for ci, kn, z in zip(sampled, knobs, noise)]
+
+    def split(self, rnd, sampled, knobs, rng):
+        times = self.draw_times(sampled, knobs, rng)
+        survivors = [i for i, t in enumerate(times) if t <= self.deadline]
+        dropped = [i for i, t in enumerate(times) if t > self.deadline]
+        return survivors, dropped, times
+
+
+# ---------------------------------------------------------------------------
+# the bundle
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RoundPlan:
+    """One round's composition, as callbacks and records observe it."""
+    round: int
+    available: Tuple[int, ...]     # client ids the round could see
+    sampled: Tuple[int, ...]       # the cohort the sampler picked
+    survivors: Tuple[int, ...]     # reported before the deadline
+    dropped: Tuple[int, ...]       # sampled but missed the deadline
+    times: Tuple[float, ...] = ()  # straggler draws (aligned to sampled)
+
+
+@dataclass
+class FleetDynamics:
+    """Sampler x availability x straggler bundle + the dropped-client
+    token-budget ledger. One instance drives one engine run (``reset``
+    clears cursors and debts between runs)."""
+
+    sampler: ClientSampler
+    availability: AvailabilityModel = field(default_factory=AlwaysAvailable)
+    stragglers: StragglerModel = field(default_factory=NoStragglers)
+    carryover_tokens: bool = True   # re-credit dropped clients' budget
+    max_carry_accum: int = 4        # cap on extra grad-accum steps/round
+    _debt: Dict[int, int] = field(default_factory=dict, repr=False)
+
+    @classmethod
+    def default(cls, fl: FLConfig) -> "FleetDynamics":
+        """The PR-1 loop as an explicit bundle: always-available fleet,
+        uniform K-of-N, no stragglers. Stream-identical to the old
+        engine's inline ``rng.choice``."""
+        return cls(sampler=UniformSampler(fl.clients_per_round))
+
+    def reset(self) -> None:
+        self.sampler.reset()
+        self._debt.clear()
+
+    # -- round composition --------------------------------------------------
+    def compose(self, rnd: int, clients: Sequence[ClientInfo],
+                rng: np.random.Generator,
+                duals: Dict[str, Dict[str, float]]
+                ) -> Tuple[List[ClientInfo], List[ClientInfo]]:
+        """-> (available, sampled) for this round."""
+        avail = self.availability.available(rnd, clients, rng)
+        sampled = self.sampler.sample(rnd, avail, rng, duals)
+        return avail, sampled
+
+    def adjust_knobs(self, sampled: Sequence[ClientInfo],
+                     knobs: Sequence[Knobs]) -> List[Knobs]:
+        """Spend carried token debt: a client that dropped earlier gets
+        extra grad-accum microbatches (capped) so its lost tokens are
+        made up without changing the round's step count."""
+        if not self.carryover_tokens:
+            return list(knobs)
+        out = []
+        for ci, kn in zip(sampled, knobs):
+            debt = self._debt.get(ci.client_id, 0)
+            if debt > 0:
+                extra = min(self.max_carry_accum,
+                            max(1, math.ceil(debt / (kn.s * kn.b))))
+                kn = dataclasses.replace(kn, grad_accum=kn.grad_accum + extra)
+            out.append(kn)
+        return out
+
+    def finish(self, rnd: int, sampled: Sequence[ClientInfo],
+               knobs: Sequence[Knobs], rng: np.random.Generator
+               ) -> Tuple[List[int], List[int], List[float]]:
+        return self.stragglers.split(rnd, sampled, knobs, rng)
+
+    def settle(self, sampled: Sequence[ClientInfo],
+               base_knobs: Sequence[Knobs],
+               adjusted_knobs: Sequence[Knobs],
+               survivor_idx: Sequence[int],
+               dropped_idx: Sequence[int]) -> None:
+        """Update the ledger: survivors pay down exactly the tokens their
+        carry boost trained (when ``max_carry_accum`` capped the boost
+        the remainder stays owed); dropped clients owe this round's
+        *base* token budget on top of any standing debt (the carry boost
+        itself never compounds)."""
+        if not self.carryover_tokens:
+            return
+        for i in survivor_idx:
+            cid = sampled[i].client_id
+            if cid not in self._debt:
+                continue
+            base, adj = base_knobs[i], adjusted_knobs[i]
+            repaid = (adj.grad_accum - base.grad_accum) * adj.s * adj.b
+            left = self._debt[cid] - repaid
+            if left > 0:
+                self._debt[cid] = left
+            else:
+                del self._debt[cid]
+        for i in dropped_idx:
+            kn = base_knobs[i]
+            cid = sampled[i].client_id
+            self._debt[cid] = (self._debt.get(cid, 0)
+                               + kn.s * kn.grad_accum * kn.b)
+
+    def debt(self, client_id: int) -> int:
+        """Outstanding token (sequence) debt for a client (0 if none)."""
+        return self._debt.get(client_id, 0)
+
+
+def make_dynamics(fl: FLConfig, sampler: str = "uniform",
+                  availability: str = "always", stragglers: str = "none",
+                  deadline: float = 1.5, jitter: float = 0.25,
+                  churn_p: float = 0.8, period: int = 4, on_rounds: int = 2
+                  ) -> FleetDynamics:
+    """Convenience string-spec constructor mirroring ``make_strategy`` /
+    ``make_executor`` so configs and benchmarks can name a scenario."""
+    samplers = {
+        "full": lambda: FullParticipation(),
+        "uniform": lambda: UniformSampler(fl.clients_per_round),
+        "round_robin": lambda: RoundRobinSampler(fl.clients_per_round),
+        "resource_aware": lambda: ResourceAwareSampler(fl.clients_per_round),
+    }
+    avails = {
+        "always": lambda: AlwaysAvailable(),
+        "periodic": lambda: PeriodicAvailability(period, on_rounds),
+        "bernoulli": lambda: BernoulliChurn(churn_p),
+    }
+    stragglerss = {
+        "none": lambda: NoStragglers(),
+        "deadline": lambda: DeadlineStragglers.for_config(fl, deadline,
+                                                          jitter),
+    }
+    try:
+        return FleetDynamics(sampler=samplers[sampler](),
+                             availability=avails[availability](),
+                             stragglers=stragglerss[stragglers]())
+    except KeyError as e:
+        raise ValueError(f"unknown dynamics component {e.args[0]!r}") from None

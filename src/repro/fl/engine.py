@@ -1,13 +1,22 @@
 """The composable federated engine (Algorithm 1 as pure control flow).
 
-``FederatedEngine`` wires four independently replaceable pieces:
+``FederatedEngine`` wires five independently replaceable pieces:
 
     strategy  — FederatedStrategy: knobs / aggregation / dual state
     executor  — ClientExecutor: how LocalTrain actually runs (sequential
                 Python loop vs one jitted vmap over stacked clients)
     profiles  — DeviceProfile map: per-device-class budgets + resource
                 models (the paper's homogeneous fleet is the default)
+    dynamics  — FleetDynamics: availability gating x client sampling x
+                deadline stragglers (the default bundle reproduces the
+                always-available uniform-K-of-N loop bit-for-bit)
     callbacks — RoundCallback hooks for logging / checkpoints / timing
+
+Round composition is per-round state, not a static list: the engine
+asks ``dynamics`` who is reachable, who is picked, and who reported
+before the deadline; only the *survivors* feed aggregation (weights
+renormalized over them) and the CAFL-L dual update, and dropped
+clients' token budgets are carried to their next participation.
 
 ``repro.core.server.run_federated`` is a thin wrapper over this class
 that preserves the seed API exactly.
@@ -31,6 +40,7 @@ from repro.data.shakespeare import CharDataset
 from repro.fl.callbacks import RoundCallback
 from repro.fl.device import (DEFAULT_PROFILE, ClientInfo, DeviceProfile,
                              uniform_fleet)
+from repro.fl.dynamics import FleetDynamics, RoundPlan
 from repro.fl.executor import ClientExecutor, make_executor
 from repro.fl.strategy import FederatedStrategy, make_strategy
 from repro.models.zoo import Model
@@ -44,6 +54,7 @@ class FederatedEngine:
                  executor: Optional[ExecutorSpec] = None,
                  profiles: Optional[Dict[str, DeviceProfile]] = None,
                  client_profiles: Optional[Sequence[str]] = None,
+                 dynamics: Optional[FleetDynamics] = None,
                  callbacks: Sequence[RoundCallback] = (),
                  resources: Optional[ResourceModel] = None,
                  init_duals: Optional[DualState] = None):
@@ -62,6 +73,7 @@ class FederatedEngine:
             "client_profiles must name a profile for every client"
         self._profiles_raw = profiles
         self._client_profiles = list(client_profiles)
+        self.dynamics = dynamics or FleetDynamics.default(fl)
         self.callbacks = list(callbacks)
         self._base_resources = resources
 
@@ -108,47 +120,86 @@ class FederatedEngine:
         result = FLResult(method=self.strategy.name)
         heterogeneous = len(self.profiles) > 1
 
+        dynamics = self.dynamics
+        dynamics.reset()
+        fleet = [self._client_info(c) for c in range(fl.num_clients)]
+
         self.params = params
         self._emit("on_train_start")
         for t in range(1, rounds + 1):
             t0 = time.time()
             self._emit("on_round_start", t)
             val_loss = evaluate(params)
-            cids = rng.choice(fl.num_clients, size=fl.clients_per_round,
-                              replace=False)
-            clients = [self._client_info(int(c)) for c in cids]
-            knobs = self.strategy.configure_round(t, clients)
 
-            outs = executor.run_round(params, list(zip(clients, knobs)))
+            # --- round composition: gate, sample, deadline -------------
+            avail, clients = dynamics.compose(
+                t, fleet, rng, self.strategy.duals_snapshot())
+            base_knobs = self.strategy.configure_round(t, clients)
+            knobs = dynamics.adjust_knobs(clients, base_knobs)
+            surv_idx, drop_idx, times = dynamics.finish(t, clients, knobs,
+                                                        rng)
+            survivors = [clients[i] for i in surv_idx]
+            surv_knobs = [knobs[i] for i in surv_idx]
+            plan = RoundPlan(
+                round=t,
+                available=tuple(ci.client_id for ci in avail),
+                sampled=tuple(ci.client_id for ci in clients),
+                survivors=tuple(ci.client_id for ci in survivors),
+                dropped=tuple(clients[i].client_id for i in drop_idx),
+                times=tuple(times))
+            self._emit("on_round_composed", plan)
+            if drop_idx:
+                self.strategy.on_dropout([clients[i] for i in drop_idx])
 
-            weights = [float(ci.shard_size) for ci in clients]
-            delta = self.strategy.aggregate([o.delta for o in outs], weights)
-            params = aggregation.apply_delta(params, delta)
-            self.params = params
+            # --- LocalTrain for the cohort; only survivors report ------
+            outs = (executor.run_round(params,
+                                       list(zip(survivors, surv_knobs)))
+                    if survivors else [])
+            if outs:
+                weights = [float(ci.shard_size) for ci in survivors]
+                delta = self.strategy.aggregate([o.delta for o in outs],
+                                                weights)
+                params = aggregation.apply_delta(params, delta)
+                self.params = params
+            dynamics.settle(clients, base_knobs, knobs, surv_idx, drop_idx)
 
+            # --- constraint accounting over the clients that reported --
             usages = [ci.profile.resources.usage(o.params_active, kn)
-                      for ci, kn, o in zip(clients, knobs, outs)]
+                      for ci, kn, o in zip(survivors, surv_knobs, outs)]
             energy_true = [
                 ci.profile.resources.usage(o.params_active, kn,
                                            include_accum=True)["energy"]
-                for ci, kn, o in zip(clients, knobs, outs)]
-            usage = {r: float(np.mean([u[r] for u in usages]))
-                     for r in RESOURCES}
+                for ci, kn, o in zip(survivors, surv_knobs, outs)]
+            if usages:
+                usage = {r: float(np.mean([u[r] for u in usages]))
+                         for r in RESOURCES}
+                train_loss = float(np.mean([o.train_loss for o in outs]))
+                wire_mb = float(np.mean([o.wire_mb_actual for o in outs]))
+                energy = float(np.mean(energy_true))
+            else:               # everyone dropped / nobody reachable
+                usage = {r: 0.0 for r in RESOURCES}
+                train_loss = wire_mb = energy = 0.0
             ratios = usage_ratios(usage, fl.budgets)
-            duals_by_profile = self.strategy.update_state(usages, clients)
+            duals_by_profile = self.strategy.update_state(usages, survivors)
 
+            # record the strategy's policy knobs, not any one client's
+            # private carry boost (that stays visible via RoundPlan)
             record = RoundRecord(
-                round=t, val_loss=val_loss, knobs=knobs[0].as_dict(),
+                round=t, val_loss=val_loss,
+                knobs=base_knobs[0].as_dict() if base_knobs else {},
                 usage=usage, ratios=ratios,
                 duals=_default_duals(duals_by_profile),
-                train_loss=float(np.mean([o.train_loss for o in outs])),
-                wire_mb_actual=float(np.mean([o.wire_mb_actual
-                                              for o in outs])),
-                energy_true=float(np.mean(energy_true)),
+                train_loss=train_loss,
+                wire_mb_actual=wire_mb,
+                energy_true=energy,
                 seconds=time.time() - t0,
                 per_profile=_per_profile_record(
-                    clients, knobs, usages, duals_by_profile)
-                if heterogeneous else {})
+                    survivors, [base_knobs[i] for i in surv_idx], usages,
+                    duals_by_profile)
+                if heterogeneous and survivors else {},
+                participants=[ci.client_id for ci in survivors],
+                dropped=[clients[i].client_id for i in drop_idx],
+                num_available=len(avail))
             result.history.append(record)
             self._emit("on_round_end", record)
 

@@ -45,9 +45,18 @@ class FederatedStrategy:
 
     def update_state(self, usages: Sequence[Dict[str, float]],
                      clients: Sequence[ClientInfo]) -> Dict[str, Dict[str, float]]:
-        """Consume the round's per-client usage; returns the per-profile
-        dual snapshot for logging ({} when the strategy keeps no duals)."""
+        """Consume the round's per-client usage — under fleet dynamics
+        the engine passes only the clients that actually *reported*, so
+        duals never move on work the server never saw. Returns the
+        per-profile dual snapshot for logging ({} when the strategy
+        keeps no duals; with no survivors the snapshot is unchanged)."""
         return {}
+
+    def on_dropout(self, dropped: Sequence[ClientInfo]) -> None:
+        """Observe clients that were sampled but missed the round
+        deadline (their deltas and usages are discarded). Default:
+        ignore — the FleetDynamics ledger already carries their token
+        budget; strategies may additionally adapt."""
 
     def duals_snapshot(self) -> Dict[str, Dict[str, float]]:
         return {}
@@ -143,6 +152,9 @@ class ServerOpt(FederatedStrategy):
 
     def update_state(self, usages, clients):
         return self.inner.update_state(usages, clients)
+
+    def on_dropout(self, dropped):
+        self.inner.on_dropout(dropped)
 
     def duals_snapshot(self):
         return self.inner.duals_snapshot()

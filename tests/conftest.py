@@ -2,6 +2,18 @@ import numpy as np
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="regenerate the committed golden trajectory files "
+             "(tests/golden/*.json) instead of comparing against them")
+
+
+@pytest.fixture(scope="session")
+def update_golden(request):
+    return request.config.getoption("--update-golden")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,93 @@
+"""Hypothesis property tests for the wire round-trip
+(``compress_decompress`` / ``ops.quantize_dequantize``): for q in {1, 2}
+the reconstruction error of every element is bounded by half the
+per-block scale (absmax/2^bits), across odd shapes (non-multiple of the
+block size), scalars, and empty leaves."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import compression  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+BITS = {1: 8, 2: 2}
+BLOCK = 256
+
+odd_shapes = st.sampled_from([
+    (), (1,), (7,), (255,), (257,), (511,), (3, 0, 5), (0,),
+    (3, 85), (5, 51, 2), (BLOCK,), (BLOCK + 1,), (2, BLOCK - 1),
+])
+
+
+def _per_block_bound(x_flat: np.ndarray, bits: int) -> np.ndarray:
+    """Elementwise bound: half the mid-rise step of the element's block
+    (blocks are taken over the zero-padded flattened tensor)."""
+    n = x_flat.size
+    pad = (-n) % BLOCK
+    blocks = np.pad(x_flat, (0, pad)).reshape(-1, BLOCK)
+    absmax = np.abs(blocks).max(axis=1, keepdims=True)
+    scale = absmax / (2 ** (bits - 1))
+    return np.repeat(scale / 2, BLOCK, axis=1).reshape(-1)[:n]
+
+
+@settings(max_examples=40, deadline=None)
+@given(odd_shapes, st.sampled_from([1, 2]), st.floats(1e-3, 1e3),
+       st.integers(0, 2 ** 31 - 1))
+def test_roundtrip_error_bounded_by_block_scale(shape, q, amp, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=shape) * amp).astype(np.float32)
+    y = np.asarray(ops.quantize_dequantize(jnp.asarray(x), bits=BITS[q]))
+    assert y.shape == x.shape and y.dtype == x.dtype
+    assert np.all(np.isfinite(y))
+    if x.size == 0:
+        return
+    err = np.abs(y - x).reshape(-1)
+    bound = _per_block_bound(x.reshape(-1), BITS[q])
+    # fp32 slack: scale and (code + 0.5) * scale each round once
+    assert np.all(err <= bound * (1 + 1e-3) + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([1, 2]), st.integers(0, 2 ** 31 - 1))
+def test_tree_roundtrip_mixed_leaves(q, seed):
+    """compress_decompress maps over a pytree with empty, scalar, and
+    non-block-aligned leaves without reshaping surprises; q=0 is the
+    identity."""
+    rng = np.random.default_rng(seed)
+    tree = {
+        "empty": jnp.zeros((0,), jnp.float32),
+        "scalar": jnp.asarray(np.float32(rng.normal())),
+        "odd": jnp.asarray(rng.normal(size=(3, 85)).astype(np.float32)),
+        "aligned": jnp.asarray(
+            rng.normal(size=(2, BLOCK)).astype(np.float32)),
+    }
+    out = compression.compress_decompress(tree, q)
+    for key in tree:
+        assert out[key].shape == tree[key].shape
+    ident = compression.compress_decompress(tree, 0)
+    for key in tree:
+        np.testing.assert_array_equal(np.asarray(ident[key]),
+                                      np.asarray(tree[key]))
+    # per-leaf error bound holds through the tree entry point
+    for key in ("scalar", "odd", "aligned"):
+        x = np.asarray(tree[key]).reshape(-1)
+        y = np.asarray(out[key]).reshape(-1)
+        bound = _per_block_bound(x, BITS[q])
+        assert np.all(np.abs(y - x) <= bound * (1 + 1e-3) + 1e-6)
+
+
+def test_zero_and_constant_blocks():
+    """Degenerate blocks: all-zero stays exactly zero; a constant block
+    reconstructs within half a step of the constant."""
+    for q in (1, 2):
+        z = np.asarray(ops.quantize_dequantize(
+            jnp.zeros((2 * BLOCK + 7,), jnp.float32), bits=BITS[q]))
+        np.testing.assert_array_equal(z, 0.0)
+        c = np.full((BLOCK + 3,), 0.7, np.float32)
+        y = np.asarray(ops.quantize_dequantize(jnp.asarray(c),
+                                               bits=BITS[q]))
+        step = 0.7 / (2 ** (BITS[q] - 1))
+        assert np.all(np.abs(y - c) <= step / 2 * (1 + 1e-3) + 1e-6)

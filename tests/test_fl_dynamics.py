@@ -1,0 +1,396 @@
+"""Fleet dynamics (repro.fl.dynamics): deterministic participation under
+every sampler x availability x straggler combination, dropout weight
+renormalization, token-budget carry-over, and engine integration
+(CAFL-L with dropout keeps finite non-negative duals; the default
+bundle reproduces the static-fleet loop exactly)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_fl_config
+from repro.core import aggregation
+from repro.core.policy import Knobs, fedavg_knobs
+from repro.data import load_corpus
+from repro.fl import (AlwaysAvailable, BernoulliChurn, ClientInfo,
+                      DeadlineStragglers, DeviceProfile, FederatedEngine,
+                      FleetDynamics, FullParticipation, NoStragglers,
+                      PeriodicAvailability, ResourceAwareSampler,
+                      RoundCallback, RoundRobinSampler, UniformSampler,
+                      make_dynamics)
+from repro.models import build
+
+SAMPLERS = ["full", "uniform", "round_robin", "resource_aware"]
+AVAILABILITY = ["always", "periodic", "bernoulli"]
+STRAGGLERS = ["none", "deadline"]
+
+
+def _fleet(n=8, het=False):
+    fl = get_fl_config()
+    fast = DeviceProfile("fast", fl.budgets, compute_scale=0.5)
+    slow = DeviceProfile("slow", fl.budgets.scaled(0.5), compute_scale=3.0,
+                         availability=0.5)
+    profiles = [fast if (not het or i % 2 == 0) else slow for i in range(n)]
+    return [ClientInfo(i, profiles[i], shard_size=100 + i) for i in range(n)]
+
+
+def _trace(dynamics, clients, seed, rounds=6, duals=None):
+    """Run composition+deadline for several rounds; return the
+    (sampled, dropped) id tuples per round."""
+    rng = np.random.default_rng(seed)
+    dynamics.reset()
+    kn = Knobs(k=2, s=4, b=8, q=0)
+    out = []
+    for t in range(1, rounds + 1):
+        _, sampled = dynamics.compose(t, clients, rng, duals or {})
+        base = [kn] * len(sampled)
+        knobs = dynamics.adjust_knobs(sampled, base)
+        surv, drop, _ = dynamics.finish(t, sampled, knobs, rng)
+        dynamics.settle(sampled, base, knobs, surv, drop)
+        out.append((tuple(ci.client_id for ci in sampled),
+                    tuple(sampled[i].client_id for i in drop)))
+    return out
+
+
+@pytest.mark.parametrize("sampler", SAMPLERS)
+@pytest.mark.parametrize("availability", AVAILABILITY)
+@pytest.mark.parametrize("stragglers", STRAGGLERS)
+def test_same_seed_same_participation(sampler, availability, stragglers):
+    """Every combination is deterministic given the seed."""
+    fl = get_fl_config().replace(num_clients=8, clients_per_round=3)
+    clients = _fleet(8, het=True)
+    runs = [_trace(make_dynamics(fl, sampler, availability, stragglers,
+                                 deadline=1.0, churn_p=0.7),
+                   clients, seed=42) for _ in range(2)]
+    assert runs[0] == runs[1]
+    # and a different seed moves at least one stochastic combination
+    if "bernoulli" == availability or sampler in ("uniform",
+                                                  "resource_aware"):
+        other = _trace(make_dynamics(fl, sampler, availability, stragglers,
+                                     deadline=1.0, churn_p=0.7),
+                       clients, seed=43)
+        assert other != runs[0]
+
+
+def test_uniform_sampler_matches_legacy_stream():
+    """Default bundle consumes the generator exactly like the old
+    engine's inline ``rng.choice(N, size=K, replace=False)``."""
+    fl = get_fl_config().replace(num_clients=16, clients_per_round=6)
+    clients = _fleet(16)
+    rng_new = np.random.default_rng(fl.seed)
+    rng_old = np.random.default_rng(fl.seed)
+    dyn = FleetDynamics.default(fl)
+    for t in range(1, 5):
+        _, sampled = dyn.compose(t, clients, rng_new, {})
+        legacy = rng_old.choice(fl.num_clients, size=fl.clients_per_round,
+                                replace=False)
+        assert [ci.client_id for ci in sampled] == [int(c) for c in legacy]
+
+
+def test_round_robin_visits_everyone():
+    fl = get_fl_config().replace(num_clients=6, clients_per_round=2)
+    clients = _fleet(6)
+    dyn = FleetDynamics(sampler=RoundRobinSampler(2))
+    trace = _trace(dyn, clients, seed=0, rounds=3)
+    seen = [cid for sampled, _ in trace for cid in sampled]
+    assert sorted(seen) == list(range(6))     # one full cycle, no repeats
+
+
+def test_full_participation_takes_all_available():
+    clients = _fleet(5)
+    dyn = FleetDynamics(sampler=FullParticipation())
+    (sampled, dropped), = _trace(dyn, clients, seed=0, rounds=1)
+    assert sampled == tuple(range(5)) and dropped == ()
+
+
+def test_periodic_availability_windows():
+    av = PeriodicAvailability(period=4, on_rounds=2)
+    clients = _fleet(8)
+    rng = np.random.default_rng(0)
+    for rnd in range(1, 9):
+        got = {ci.client_id for ci in av.available(rnd, clients, rng)}
+        want = {c for c in range(8) if (rnd + c) % 4 < 2}
+        assert got == want
+    # per-profile override: profile "fast" always on
+    av2 = PeriodicAvailability(period=4, on_rounds=1,
+                               per_profile={"fast": (1, 1)})
+    got = {ci.client_id
+           for ci in av2.available(3, _fleet(4, het=True), rng)}
+    assert {0, 2} <= got                      # fast clients are 0 and 2
+
+
+def test_bernoulli_churn_respects_profile_availability():
+    clients = _fleet(8, het=True)             # odd ids: availability=0.5
+    churn = BernoulliChurn(p=1.0)
+    rng = np.random.default_rng(7)
+    counts = {c: 0 for c in range(8)}
+    for rnd in range(200):
+        for ci in churn.available(rnd, clients, rng):
+            counts[ci.client_id] += 1
+    fast = np.mean([counts[c] for c in range(0, 8, 2)])
+    slow = np.mean([counts[c] for c in range(1, 8, 2)])
+    assert fast == 200                        # p=1.0 * availability 1.0
+    assert 60 < slow < 140                    # ~100 of 200
+
+
+def test_resource_aware_sampler_prefers_headroom():
+    clients = _fleet(8, het=True)
+    duals = {"fast": {"energy": 0.0, "comm": 0.0, "memory": 0.0,
+                      "temp": 0.0},
+             "slow": {"energy": 3.0, "comm": 1.0, "memory": 0.0,
+                      "temp": 0.5}}
+    s = ResourceAwareSampler(4, explore=0.0)
+    rng = np.random.default_rng(0)
+    picked = s.sample(1, clients, rng, duals)
+    assert all(ci.profile.name == "fast" for ci in picked)
+    # no duals yet -> uniform fallback still returns k clients
+    assert len(s.sample(1, clients, np.random.default_rng(0), {})) == 4
+
+
+def test_resource_aware_explore_avoids_starvation():
+    """A pressed tier must keep getting sampled (its duals can only
+    decay through participation); the explore slots guarantee it."""
+    clients = _fleet(8, het=True)
+    duals = {"fast": {"energy": 0.0, "comm": 0.0, "memory": 0.0,
+                      "temp": 0.0},
+             "slow": {"energy": 9.0, "comm": 9.0, "memory": 9.0,
+                      "temp": 9.0}}
+    s = ResourceAwareSampler(4)                  # default explore=0.25
+    rng = np.random.default_rng(0)
+    slow_picks = sum(
+        sum(ci.profile.name == "slow" for ci in s.sample(t, clients, rng,
+                                                         duals))
+        for t in range(50))
+    assert slow_picks > 0
+
+
+def test_deadline_stragglers_drop_slow_silicon():
+    fl = get_fl_config()
+    model = DeadlineStragglers.for_config(fl, deadline=1.5, jitter=0.0)
+    clients = _fleet(8, het=True)             # slow tier: compute_scale=3
+    kn = fedavg_knobs(fl)                     # exactly 1.0 baseline units
+    surv, drop, times = model.split(1, clients, [kn] * 8,
+                                    np.random.default_rng(0))
+    assert sorted(clients[i].client_id for i in surv) == [0, 2, 4, 6]
+    assert sorted(clients[i].client_id for i in drop) == [1, 3, 5, 7]
+    assert times[0] == pytest.approx(0.5) and times[1] == pytest.approx(3.0)
+
+
+def test_dropout_renormalization_matches_survivor_mean():
+    """Aggregating survivors with their shard weights equals the
+    weighted mean renormalized over survivors only."""
+    import jax.numpy as jnp
+    deltas = [{"w": jnp.full(3, 1.0)}, {"w": jnp.full(3, 5.0)},
+              {"w": jnp.full(3, 9.0)}]
+    weights = [1.0, 3.0, 6.0]
+    surv = [0, 2]                             # client 1 dropped
+    agg = aggregation.aggregate([deltas[i] for i in surv],
+                                [weights[i] for i in surv])
+    want = (1.0 * 1.0 + 9.0 * 6.0) / (1.0 + 6.0)
+    assert np.allclose(np.asarray(agg["w"]), want)
+
+
+def test_token_debt_carries_to_next_participation():
+    fl = get_fl_config()
+    dyn = FleetDynamics(sampler=FullParticipation(), max_carry_accum=4)
+    dyn.reset()
+    clients = _fleet(2)
+    kn = Knobs(k=2, s=4, b=8, q=0, grad_accum=1)
+    base = [kn, kn]
+    # round 1: client 1 drops -> owes s*ga*b = 32 sequences
+    dyn.settle(clients, base, base, survivor_idx=[0], dropped_idx=[1])
+    assert dyn.debt(1) == 32 and dyn.debt(0) == 0
+    # round 2: the debtor's grad_accum is boosted by ceil(32/32)=1
+    adj = dyn.adjust_knobs(clients, base)
+    assert adj[0].grad_accum == 1 and adj[1].grad_accum == 2
+    # dropping again adds only the BASE budget (no compounding)...
+    dyn.settle(clients, base, adj, survivor_idx=[0], dropped_idx=[1])
+    assert dyn.debt(1) == 64
+    # ...and the boost stays capped
+    adj = dyn.adjust_knobs(clients, base)
+    assert adj[1].grad_accum == 1 + 2
+    # surviving with an uncapped boost repays the full debt
+    dyn.settle(clients, base, adj, survivor_idx=[0, 1], dropped_idx=[])
+    assert dyn.debt(1) == 0
+
+
+def test_capped_carry_boost_keeps_remainder_owed():
+    """When max_carry_accum caps the boost, the unpaid remainder stays
+    on the ledger instead of being silently forgiven."""
+    dyn = FleetDynamics(sampler=FullParticipation(), max_carry_accum=2)
+    dyn.reset()
+    clients = _fleet(2)
+    kn = Knobs(k=2, s=4, b=8, q=0, grad_accum=1)
+    base = [kn, kn]
+    heavy = [dataclasses.replace(kn, grad_accum=8)] * 2
+    # client 1 drops a ga=8 round -> owes 4*8*8 = 256 sequences
+    dyn.settle(clients, heavy, heavy, [0], [1])
+    assert dyn.debt(1) == 256
+    adj = dyn.adjust_knobs(clients, base)
+    assert adj[1].grad_accum == 1 + 2            # capped below ceil(256/32)=8
+    # surviving repays only the 2*32 = 64 boosted sequences
+    dyn.settle(clients, base, adj, [0, 1], [])
+    assert dyn.debt(1) == 256 - 64
+    # successive participations drain the remainder to zero
+    for _ in range(3):
+        adj = dyn.adjust_knobs(clients, base)
+        dyn.settle(clients, base, adj, [0, 1], [])
+    assert dyn.debt(1) == 0
+
+
+def test_carryover_disabled():
+    dyn = FleetDynamics(sampler=FullParticipation(),
+                        carryover_tokens=False)
+    clients = _fleet(2)
+    kn = Knobs(k=2, s=4, b=8, q=0)
+    dyn.settle(clients, [kn, kn], [kn, kn], [0], [1])
+    assert dyn.debt(1) == 0
+    assert dyn.adjust_knobs(clients, [kn, kn])[1] == kn
+
+
+def test_make_dynamics_unknown_component():
+    fl = get_fl_config()
+    with pytest.raises(ValueError):
+        make_dynamics(fl, sampler="psychic")
+    with pytest.raises(ValueError):
+        make_dynamics(fl, availability="sometimes")
+    with pytest.raises(ValueError):
+        make_dynamics(fl, stragglers="quantum")
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    ds = load_corpus(target_bytes=60_000)
+    cfg = get_config("charlm-shakespeare").replace(
+        vocab_size=max(ds.vocab_size, 64), num_layers=3, d_model=48,
+        num_heads=4, num_kv_heads=4, head_dim=12, d_ff=96)
+    fl = get_fl_config().replace(
+        rounds=3, num_clients=6, clients_per_round=3, s_base=3, b_base=8,
+        seq_len=16, eval_batches=1, eval_batch_size=8)
+    fl = fl.replace(duals=dataclasses.replace(fl.duals, s_min=2, b_min=4))
+    return ds, cfg, fl
+
+
+@pytest.fixture(scope="module")
+def tiny_model(tiny_setup):
+    _, cfg, _ = tiny_setup
+    return build(cfg)
+
+
+def test_default_dynamics_reproduces_static_fleet(tiny_setup, tiny_model):
+    """dynamics=None and an explicit default bundle yield identical
+    histories (same sampling stream, same losses, same knobs)."""
+    ds, cfg, fl = tiny_setup
+    fl2 = fl.replace(rounds=2)
+    res_a = FederatedEngine(tiny_model, fl2, ds, strategy="cafl").run()
+    res_b = FederatedEngine(tiny_model, fl2, ds, strategy="cafl",
+                            dynamics=FleetDynamics.default(fl2)).run()
+    for ra, rb in zip(res_a.history, res_b.history):
+        assert ra.participants == rb.participants and ra.dropped == []
+        assert ra.knobs == rb.knobs and ra.duals == rb.duals
+        assert ra.val_loss == pytest.approx(rb.val_loss, abs=1e-6)
+        assert ra.train_loss == pytest.approx(rb.train_loss, abs=1e-6)
+
+
+def test_cafl_with_dropout_keeps_finite_duals(tiny_setup, tiny_model):
+    """Smoke: churn + deadline stragglers under CAFL-L — duals stay
+    finite and non-negative, records report participation faithfully."""
+    ds, cfg, fl = tiny_setup
+    dyn = FleetDynamics(
+        sampler=UniformSampler(fl.clients_per_round),
+        availability=BernoulliChurn(0.8),
+        stragglers=DeadlineStragglers.for_config(fl, deadline=1.2,
+                                                 jitter=0.6))
+    plans = []
+
+    class PlanCatcher(RoundCallback):
+        def on_round_composed(self, engine, plan):
+            plans.append(plan)
+
+    res = FederatedEngine(tiny_model, fl, ds, strategy="cafl", dynamics=dyn,
+                          callbacks=[PlanCatcher()]).run()
+    assert len(plans) == fl.rounds
+    saw_drop = False
+    for r, plan in zip(res.history, plans):
+        assert plan.round == r.round
+        assert set(r.participants) | set(r.dropped) == set(plan.sampled)
+        assert set(r.participants).isdisjoint(r.dropped)
+        assert r.num_available == len(plan.available)
+        assert set(plan.sampled) <= set(plan.available)
+        saw_drop |= bool(r.dropped)
+        assert np.isfinite(r.val_loss)
+        for lam in r.duals.values():
+            assert np.isfinite(lam) and lam >= 0.0
+    assert saw_drop, "deadline=1.2 with jitter should drop someone"
+
+
+def test_zero_survivor_round_is_safe(tiny_setup, tiny_model):
+    """A round where every sampled client misses the deadline leaves the
+    params untouched and the record well-formed."""
+    ds, cfg, fl = tiny_setup
+    fl1 = fl.replace(rounds=1)
+    dyn = FleetDynamics(sampler=UniformSampler(fl1.clients_per_round),
+                        stragglers=DeadlineStragglers(deadline=0.0,
+                                                      jitter=0.0))
+    lines = []
+    from repro.fl import LoggingCallback
+    res = FederatedEngine(tiny_model, fl1, ds, strategy="cafl", dynamics=dyn,
+                          callbacks=[LoggingCallback(lines.append)]).run()
+    r = res.history[0]
+    assert r.participants == [] and len(r.dropped) == fl1.clients_per_round
+    assert r.train_loss == 0.0 and all(v == 0.0 for v in r.usage.values())
+    assert all(lam == 0.0 for lam in r.duals.values())   # no update fired
+    assert np.isfinite(r.val_loss)
+    assert len(lines) == 1 and "drop=3" in lines[0]
+
+
+def test_no_clients_reachable_round(tiny_setup, tiny_model):
+    ds, cfg, fl = tiny_setup
+    fl1 = fl.replace(rounds=1)
+    dyn = FleetDynamics(sampler=UniformSampler(fl1.clients_per_round),
+                        availability=BernoulliChurn(0.0))
+    lines = []
+    from repro.fl import LoggingCallback
+    res = FederatedEngine(tiny_model, fl1, ds, strategy="fedavg",
+                          dynamics=dyn,
+                          callbacks=[LoggingCallback(lines.append)]).run()
+    r = res.history[0]
+    assert r.knobs == {} and r.num_available == 0 and r.participants == []
+    assert "no clients reachable" in lines[0]
+
+
+@pytest.mark.parametrize("alpha", [0.05, 0.1, 1.0])
+def test_extreme_dirichlet_shards_nonempty(tiny_setup, alpha):
+    """Extreme Dirichlet draws used to truncate some shard to zero
+    length; the partition guard must keep every client's shard
+    non-empty (so its batch stream can always index it)."""
+    from repro.data.federated import FederatedData
+    ds, cfg, fl = tiny_setup
+    for seed in range(10):
+        data = FederatedData(ds.train, num_clients=16, seed=seed,
+                             noniid_alpha=alpha)
+        sizes = [data.shard_size(i) for i in range(16)]
+        assert min(sizes) >= 1, f"empty shard at seed={seed}"
+        assert sum(sizes) == len(ds.train)
+
+
+def test_batch_stream_isolation_under_sampling(tiny_setup):
+    """A client's batch sequence depends only on its own draw count —
+    not on which other clients were sampled around it."""
+    from repro.data.federated import FederatedData
+    ds, cfg, fl = tiny_setup
+    a = FederatedData(ds.train, fl.num_clients, seed=fl.seed)
+    b = FederatedData(ds.train, fl.num_clients, seed=fl.seed)
+    # interleave other clients' draws in one copy only
+    for other in (1, 2, 5):
+        b.batch(other, 4, 8)
+    for _ in range(3):
+        ba = a.batch(3, 4, 8)
+        bb = b.batch(3, 4, 8)
+        for key in ba:
+            np.testing.assert_array_equal(ba[key], bb[key])

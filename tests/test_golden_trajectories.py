@@ -1,0 +1,113 @@
+"""Golden regression anchors for the federated engine.
+
+Tiny fixed-seed FedAvg and CAFL-L runs whose per-round losses, knobs,
+duals and participation sets are checked against committed JSON
+(``tests/golden/``). Engine refactors that change semantics — sampling
+stream, aggregation math, dual updates, knob policy — fail here even if
+every behavioral test still passes.
+
+Regenerate after an *intentional* semantic change with:
+
+    PYTHONPATH=src python -m pytest tests/test_golden_trajectories.py \
+        --update-golden
+
+and commit the diff with a justification (see tests/README.md).
+"""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.configs import get_config, get_fl_config
+from repro.data import load_corpus
+from repro.fl import FederatedEngine
+from repro.models import build
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+# losses go through jitted matmuls: allow cross-BLAS wiggle, far below
+# the ~1e-1 shift a semantic change (different batch stream) causes
+LOSS_TOL = 5e-3
+# duals/usages are host-side float arithmetic on deterministic inputs
+EXACT_TOL = 1e-9
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    ds = load_corpus(target_bytes=60_000)
+    cfg = get_config("charlm-shakespeare").replace(
+        vocab_size=max(ds.vocab_size, 64), num_layers=3, d_model=48,
+        num_heads=4, num_kv_heads=4, head_dim=12, d_ff=96)
+    fl = get_fl_config().replace(
+        rounds=3, num_clients=4, clients_per_round=2, s_base=3, b_base=8,
+        seq_len=16, eval_batches=1, eval_batch_size=8)
+    fl = fl.replace(duals=dataclasses.replace(fl.duals, s_min=2, b_min=4))
+    return ds, cfg, fl
+
+
+@pytest.fixture(scope="module")
+def tiny_model(tiny_setup):
+    _, cfg, _ = tiny_setup
+    return build(cfg)
+
+
+def _trajectory(result):
+    return {
+        "method": result.method,
+        "rounds": [
+            {
+                "round": r.round,
+                "val_loss": r.val_loss,
+                "train_loss": r.train_loss,
+                "knobs": r.knobs,
+                "duals": r.duals,
+                "usage": r.usage,
+                "wire_mb_actual": r.wire_mb_actual,
+                "participants": r.participants,
+                "dropped": r.dropped,
+                "num_available": r.num_available,
+            }
+            for r in result.history
+        ],
+    }
+
+
+def _check_round(got, want, rnd):
+    assert got["round"] == want["round"]
+    assert got["knobs"] == want["knobs"], f"round {rnd}: knob policy moved"
+    assert got["participants"] == want["participants"], \
+        f"round {rnd}: sampling stream moved"
+    assert got["dropped"] == want["dropped"]
+    assert got["num_available"] == want["num_available"]
+    for key in ("val_loss", "train_loss", "wire_mb_actual"):
+        assert got[key] == pytest.approx(want[key], rel=LOSS_TOL,
+                                         abs=LOSS_TOL), \
+            f"round {rnd}: {key} drifted"
+    for res, lam in want["duals"].items():
+        assert got["duals"][res] == pytest.approx(lam, abs=EXACT_TOL), \
+            f"round {rnd}: dual {res} moved"
+    for res, u in want["usage"].items():
+        assert got["usage"][res] == pytest.approx(u, rel=1e-6), \
+            f"round {rnd}: usage {res} moved"
+
+
+@pytest.mark.parametrize("method", ["fedavg", "cafl"])
+def test_golden_trajectory(method, tiny_setup, tiny_model, update_golden):
+    ds, cfg, fl = tiny_setup
+    res = FederatedEngine(tiny_model, fl, ds, strategy=method).run()
+    got = _trajectory(res)
+    path = os.path.join(GOLDEN_DIR, f"{method}.json")
+    if update_golden:
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(got, f, indent=1, sort_keys=True)
+        pytest.skip(f"golden regenerated: {path}")
+    assert os.path.exists(path), \
+        f"missing golden {path}; run with --update-golden to create it"
+    with open(path) as f:
+        want = json.load(f)
+    assert got["method"] == want["method"]
+    assert len(got["rounds"]) == len(want["rounds"])
+    for g, w in zip(got["rounds"], want["rounds"]):
+        _check_round(g, w, g["round"])
