@@ -2,7 +2,10 @@
 (jit + vmap-of-scan) LocalTrain path, same tiny char-LM round — plus a
 fleet-dynamics configuration (uniform K-of-N sampling with deadline
 stragglers) showing the engine-level round cost of partial
-participation vs the full static fleet.
+participation vs the full static fleet, and a sync-vs-FedBuff
+aggregator comparison under stragglers (rounds/sec and
+rounds-to-target-loss: the barrier discards deadline-missers, the
+buffered async path applies them late).
 
     PYTHONPATH=src:. python benchmarks/fl_engine_bench.py
 
@@ -65,6 +68,7 @@ def rows():
     out.append(("fl.executor.batched_speedup", 0.0,
                 f"{timings['sequential'] / timings['batched']:.2f}x"))
     out += _dynamics_rows(model, fl, ds)
+    out += _aggregator_rows(model, fl, ds)
     return out
 
 
@@ -99,6 +103,53 @@ def _dynamics_rows(model, fl, ds):
         drops = sum(len(r.dropped) for r in res.history)
         out.append((f"fl.engine.{name}.round_mean", mean * 1e6,
                     f"{parts}reported+{drops}dropped,incl-retraces"))
+    return out
+
+
+def _aggregator_rows(model, fl, ds):
+    """Server-update policies under stragglers: the sync barrier vs
+    FedBuff buffered async, same fleet and deadline. Reported as mean
+    round wall-clock (rounds/sec, retraces included — late-report
+    execution changes group shapes) plus rounds-to-target-loss, the
+    metric the async path actually buys: late reports are applied with
+    a staleness discount instead of discarded, so the same cohort
+    budget reaches the target in fewer rounds."""
+    from repro.fl import (DeadlineStragglers, FedBuffAggregator,
+                          FederatedEngine, FleetDynamics, TimingCallback,
+                          UniformSampler)
+
+    fl_bench = fl.replace(rounds=6, eval_batches=1, eval_batch_size=16,
+                          clients_per_round=4)
+
+    def dyn():
+        return FleetDynamics(
+            sampler=UniformSampler(fl_bench.clients_per_round),
+            stragglers=DeadlineStragglers.for_config(fl_bench, deadline=1.1,
+                                                     jitter=0.3))
+
+    runs = {}
+    out = []
+    for name, agg in (("sync", "sync"),
+                      ("fedbuff", FedBuffAggregator(buffer_size=3))):
+        timing = TimingCallback()
+        res = FederatedEngine(model, fl_bench, ds, strategy="fedavg",
+                              executor="batched", dynamics=dyn(),
+                              aggregator=agg, callbacks=[timing]).run()
+        runs[name] = res
+        seconds = timing.round_seconds[1:]           # drop first compile
+        mean = sum(seconds) / len(seconds)
+        applied = sum(r.reports_applied for r in res.history)
+        late = sum(len(r.late_arrivals) for r in res.history)
+        out.append((f"fl.aggregator.{name}.round_mean", mean * 1e6,
+                    f"{applied}applied({late}late),{1.0 / mean:.2f}rounds/s"))
+    # rounds to the sync run's final loss: the async path's win metric
+    target = runs["sync"].history[-1].val_loss
+    for name, res in runs.items():
+        hit = next((r.round for r in res.history if r.val_loss <= target),
+                   None)
+        out.append((f"fl.aggregator.{name}.rounds_to_target", 0.0,
+                    f"target={target:.3f},"
+                    f"{'hit@%d' % hit if hit else 'miss@%d' % fl_bench.rounds}"))
     return out
 
 

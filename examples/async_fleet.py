@@ -1,0 +1,98 @@
+"""Async fleet: FedBuff buffered aggregation vs the deadline-discard
+barrier, on the PR 2 straggler model.
+
+Half the fleet runs 2x slower silicon than the 1.1x round deadline
+allows, so under the synchronous barrier its work is *discarded* every
+round and its token budget carried as debt — and the carry-over boost
+(extra grad-accum at the next participation) makes a one-time misser
+slower still, a death spiral that starves the barrier down to a
+handful of applied reports. A FedBuff aggregator instead executes the
+deadline-missers, lets their reports arrive in the round their
+simulated wall clock lands in, and folds them into the next buffered
+update with a staleness discount: nearly every client-round is applied
+(only reports due past the run horizon are still discarded), and the
+run keeps improving after the sync baseline stalls — fewer rounds to
+any loss target at or below the sync final.
+
+    PYTHONPATH=src python examples/async_fleet.py
+
+(REPRO_EXAMPLE_ROUNDS caps the round budget for CI smoke runs.)
+"""
+import dataclasses
+import os
+
+from repro.configs import get_config, get_fl_config
+from repro.data import load_corpus
+from repro.fl import (DeadlineStragglers, FedBuffAggregator, FederatedEngine,
+                      FleetClass, FleetDynamics, UniformSampler, make_fleet)
+from repro.models import build
+
+ROUNDS = int(os.environ.get("REPRO_EXAMPLE_ROUNDS", "10"))
+
+ds = load_corpus(target_bytes=120_000)
+cfg = get_config("charlm-shakespeare").replace(
+    vocab_size=max(ds.vocab_size, 64), num_layers=3, d_model=96,
+    num_heads=4, num_kv_heads=4, head_dim=24, d_ff=192)
+fl = get_fl_config().replace(rounds=ROUNDS, num_clients=8,
+                             clients_per_round=4, s_base=10, b_base=16,
+                             seq_len=32, eval_batches=2, eval_batch_size=32)
+fl = fl.replace(duals=dataclasses.replace(fl.duals, s_min=4, b_min=4))
+
+# two tiers: the slow half's 2x silicon never makes the 1.1x deadline
+profiles, client_profiles = make_fleet(fl, [
+    FleetClass("fast", fraction=0.5),
+    FleetClass("slow", fraction=0.5, compute_scale=2.0),
+])
+
+
+def dynamics():
+    return FleetDynamics(
+        sampler=UniformSampler(fl.clients_per_round),
+        stragglers=DeadlineStragglers.for_config(fl, deadline=1.1,
+                                                 jitter=0.2))
+
+
+model = build(cfg)
+results = {}
+for name, agg in (("sync", "sync"),
+                  ("fedbuff", FedBuffAggregator(buffer_size=3))):
+    print(f"=== {name} ===")
+    res = FederatedEngine(model, fl, ds, strategy="fedavg",
+                          executor="batched", profiles=profiles,
+                          client_profiles=client_profiles,
+                          dynamics=dynamics(), aggregator=agg).run()
+    results[name] = res
+    used = sum(r.reports_applied for r in res.history)
+    lost = sum(len(r.dropped) for r in res.history)
+    late = sum(len(r.late_arrivals) for r in res.history)
+    for r in res.history:
+        print(f"  round {r.round:2d} val={r.val_loss:.4f} "
+              f"applied={r.reports_applied} late={len(r.late_arrivals)} "
+              f"lost={len(r.dropped)} stale={r.mean_staleness:.2f}")
+    print(f"  client-rounds: {used} applied ({late} of them late), "
+          f"{lost} discarded")
+
+
+def rounds_to(res, target):
+    for r in res.history:
+        if r.val_loss <= target:
+            return r.round
+    return None
+
+
+# rounds-to-target-loss: target = just below where the discard
+# baseline ends up (its loss plateaus once the debt spiral has starved
+# the barrier of reporters)
+target = 0.99 * results["sync"].history[-1].val_loss
+print(f"\nrounds to reach 99% of the sync run's final loss "
+      f"({target:.4f}):")
+for name, res in results.items():
+    hit = rounds_to(res, target)
+    print(f"  {name:8s} {hit if hit is not None else f'>{ROUNDS} (never)'}")
+buff_hit = rounds_to(results["fedbuff"], target)
+sync_hit = rounds_to(results["sync"], target)
+if buff_hit is not None and (sync_hit is None or buff_hit < sync_hit):
+    print(f"\nFedBuff got there first: the slow tier's late reports were "
+          f"applied (staleness-discounted) instead of thrown away at the "
+          f"barrier, so the same cohort budget kept improving the model "
+          f"after the discard baseline stalled.")

@@ -8,17 +8,20 @@ each device class — the scenario the monolithic loop could not express.
     PYTHONPATH=src python examples/heterogeneous_fleet.py
 """
 import dataclasses
+import os
 
 from repro.configs import get_config, get_fl_config
 from repro.data import load_corpus
 from repro.fl import FederatedEngine, FleetClass, make_fleet
 from repro.models import build
 
+ROUNDS = int(os.environ.get("REPRO_EXAMPLE_ROUNDS", "8"))
+
 ds = load_corpus(target_bytes=120_000)
 cfg = get_config("charlm-shakespeare").replace(
     vocab_size=max(ds.vocab_size, 64), num_layers=3, d_model=96,
     num_heads=4, num_kv_heads=4, head_dim=24, d_ff=192)
-fl = get_fl_config().replace(rounds=8, num_clients=8, clients_per_round=4,
+fl = get_fl_config().replace(rounds=ROUNDS, num_clients=8, clients_per_round=4,
                              s_base=10, b_base=16, seq_len=32,
                              eval_batches=2, eval_batch_size=32)
 fl = fl.replace(duals=dataclasses.replace(fl.duals, s_min=4, b_min=4))

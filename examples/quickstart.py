@@ -3,6 +3,8 @@ sample text through the serving path (prefill + decode).
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,6 +13,11 @@ from repro.configs import get_config
 from repro.data import load_corpus, sample_batch
 from repro.models import build
 from repro.optim import adamw, apply_updates
+
+# CI smoke budget: REPRO_EXAMPLE_ROUNDS=2 trims steps and sampling
+_BUDGET = os.environ.get("REPRO_EXAMPLE_ROUNDS")
+STEPS = 60 if _BUDGET is None else max(5, int(_BUDGET) * 5)
+NEW_TOKENS = 200 if _BUDGET is None else 40
 
 ds = load_corpus()
 cfg = get_config("charlm-shakespeare").replace(vocab_size=max(ds.vocab_size, 64))
@@ -22,8 +29,8 @@ opt_state = opt.init(params)
 grad_fn = jax.jit(lambda p, b: jax.value_and_grad(
     model.train_loss, has_aux=True)(p, b))
 rng = np.random.default_rng(0)
-print("training 60 steps on", len(ds.train), "chars ...")
-for step in range(60):
+print(f"training {STEPS} steps on", len(ds.train), "chars ...")
+for step in range(STEPS):
     batch = {k: jnp.asarray(v)
              for k, v in sample_batch(ds.train, rng, 32, 64).items()}
     (loss, _), grads = grad_fn(params, batch)
@@ -36,13 +43,13 @@ for step in range(60):
 prompt = "HAMLET:\n"
 toks = jnp.asarray(ds.encode(prompt))[None, :]
 logits, cache = jax.jit(
-    lambda p, b: model.prefill(p, b, max_new_tokens=200))(
+    lambda p, b: model.prefill(p, b, max_new_tokens=NEW_TOKENS))(
         params, {"tokens": toks})
 step_fn = jax.jit(model.decode_step)
 out = list(np.asarray(toks[0]))
 key = jax.random.PRNGKey(1)
 tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-for _ in range(200):
+for _ in range(NEW_TOKENS):
     out.append(int(tok[0, 0]))
     logits, cache = step_fn(params, cache, tok)
     key, sub = jax.random.split(key)

@@ -186,9 +186,18 @@ class FLConfig:
     noniid_alpha: float = 0.0
     # ablation: disable Eq. 8 token-budget preservation (grad_accum = 1)
     token_budget: bool = True
+    # Eq. 8 rounding: "ceil" (paper; grad_accum may overshoot the token
+    # target by up to s*b-1 tokens and inflate round time past a
+    # straggler deadline) | "clamped" (floor, >=1; never trains longer
+    # than the baseline round, at the cost of undershooting the target)
+    token_preservation: str = "ceil"
     # --- engine (repro.fl) ---
     # client execution backend: "sequential" | "batched" (vmapped clients)
     executor: str = "sequential"
+    # server-update policy: "sync" (round barrier) | "fedbuff" (buffered
+    # async) | "staleness" (late reports discounted, not discarded) |
+    # "masked" (secure-aggregation simulation)
+    aggregator: str = "sync"
     # server-side optimizer on the aggregated pseudo-gradient
     # ("" = plain averaging; "adam" / "momentum" = FedAdam / FedAvgM)
     server_opt: str = ""

@@ -1,8 +1,14 @@
-"""Server-side aggregation (Algorithm 1, line 15).
+"""Server-side delta combination (Algorithm 1, line 15).
 
 The paper aggregates the *participating* clients' deltas with a plain
-mean: w <- w + (1/|S_t|) sum_i dw_i. ``weighted=True`` gives the
-|D_i|-weighted FedAvg variant (Eq. 1) for ablations.
+mean: w <- w + (1/|S_t|) sum_i dw_i. Passing ``weights`` gives the
+|D_i|-weighted FedAvg variant (Eq. 1).
+
+Weight normalization lives in one place — ``normalize_weights`` — so
+every caller (``FedAvg(weighted=True)``, ``ServerOpt``'s inner combine,
+the ``repro.fl.aggregator`` policies, dropout renormalization over
+survivors) shares the same renormalization semantics: whatever subset
+of clients is present, their weights are rescaled to sum to 1.
 """
 from __future__ import annotations
 
@@ -12,14 +18,23 @@ import jax
 import jax.numpy as jnp
 
 
+def normalize_weights(weights: Optional[Sequence[float]], n: int
+                      ) -> List[float]:
+    """The shared renormalization path: ``None`` -> uniform 1/n; else
+    weights rescaled to sum to 1 over the clients that are present."""
+    assert n > 0
+    if weights is None:
+        return [1.0 / n] * n
+    assert len(weights) == n
+    tot = sum(weights)
+    assert tot > 0, "aggregation weights must have positive mass"
+    return [x / tot for x in weights]
+
+
 def aggregate(deltas: Sequence, weights: Optional[List[float]] = None):
     n = len(deltas)
     assert n > 0
-    if weights is None:
-        w = [1.0 / n] * n
-    else:
-        tot = sum(weights)
-        w = [x / tot for x in weights]
+    w = normalize_weights(weights, n)
 
     def combine(*leaves):
         acc = leaves[0].astype(jnp.float32) * w[0]

@@ -54,10 +54,24 @@ def policy(duals: DualState, fl: FLConfig) -> Knobs:
 def token_budget_accum(fl: FLConfig, s: int, b: int) -> int:
     """Token-budget preservation (paper Eq. 8):
     grad_accum = max(1, ceil(T_target / (s * b))), T_target = s_base*b_base.
-    ``fl.token_budget=False`` ablates it (grad_accum = 1)."""
+    ``fl.token_budget=False`` ablates it (grad_accum = 1).
+
+    ``fl.token_preservation="clamped"`` rounds *down* instead: once the
+    duals shrink s and b, the ceil can overshoot the target by up to
+    s*b-1 tokens and inflate simulated round time ~1.5x — enough to
+    starve a tight straggler deadline (see ROADMAP / the unreliable
+    fleet example). Clamped mode never trains past the baseline round
+    (s * grad_accum * b <= T_target whenever s*b <= T_target), trading
+    a bounded token undershoot for deadline safety."""
+    if fl.token_preservation not in ("ceil", "clamped"):
+        raise ValueError(
+            f"unknown token_preservation {fl.token_preservation!r}; "
+            f"options: ceil, clamped")
     if not fl.token_budget:
         return 1
     t_target = fl.s_base * fl.b_base
+    if fl.token_preservation == "clamped":
+        return max(1, t_target // (s * b))
     return max(1, math.ceil(t_target / (s * b)))
 
 

@@ -42,15 +42,30 @@ class RoundRecord:
     # per-device-class breakdown; empty for a homogeneous fleet
     per_profile: Dict[str, Dict] = field(default_factory=dict)
     # --- fleet dynamics (repro.fl.dynamics) ---
-    # clients that reported before the deadline (their usages drive the
-    # dual update and their deltas the aggregate)
+    # clients whose report reached the server this round (their usages
+    # drive the dual update and their deltas the server updates);
+    # under a sync barrier these are exactly the deadline survivors
     participants: List[int] = field(default_factory=list)
-    # sampled clients that missed the round deadline (token budget
-    # carried to their next participation)
+    # sampled clients whose report was LOST this round (missed the
+    # deadline and the aggregator does not take late reports; token
+    # budget carried to their next participation)
     dropped: List[int] = field(default_factory=list)
     # fleet size the round could see after availability gating
     # (-1 = record predates fleet dynamics)
     num_available: int = -1
+    # --- server-update policy (repro.fl.aggregator) ---
+    # ServerUpdates applied this round (sync barrier: 1, or 0 with no
+    # survivors; FedBuff may apply several mid-round or none)
+    updates_applied: int = 0
+    # client reports folded into those updates
+    reports_applied: int = 0
+    # mean staleness (rounds late) over the reports delivered this
+    # round; 0.0 for a pure barrier round
+    mean_staleness: float = 0.0
+    # deadline-missers from earlier rounds whose report arrived at the
+    # aggregator this round (an async policy may buffer it and apply
+    # it in a later update — see updates_applied/reports_applied)
+    late_arrivals: List[int] = field(default_factory=list)
 
 
 @dataclass

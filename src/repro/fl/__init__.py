@@ -1,10 +1,12 @@
 """Composable federated engine: Strategy x Executor x DeviceProfile x
-Callback, replacing the seed's monolithic ``run_federated``.
+FleetDynamics x Aggregator x Callback, replacing the seed's monolithic
+``run_federated``.
 
     from repro.fl import FederatedEngine, CAFLL, BatchedExecutor
 
     engine = FederatedEngine(model, fl, dataset, strategy="cafl",
                              executor="batched",
+                             aggregator="fedbuff",   # default: "sync"
                              callbacks=[LoggingCallback()])
     result = engine.run()
 
@@ -12,6 +14,12 @@ The seed API (``repro.core.run_federated``) remains a thin wrapper.
 """
 from repro.core.client import ClientResult, ClientRunner  # noqa: F401
 from repro.core.server import FLResult, RoundRecord  # noqa: F401
+from repro.fl.aggregator import (  # noqa: F401
+    Aggregator, ClientReport, ConstantStaleness, FedBuffAggregator,
+    MaskedSumAggregator, PolynomialStaleness, ServerUpdate,
+    StalenessPolicy, StalenessWeightedAggregator, SyncAggregator,
+    make_aggregator, make_staleness_policy,
+)
 from repro.fl.callbacks import (  # noqa: F401
     CheckpointCallback, HistoryWriterCallback, LoggingCallback,
     RoundCallback, TimingCallback,

@@ -26,7 +26,13 @@ class RoundCallback:
     def on_round_composed(self, engine, plan) -> None:
         """Fires once the round's fleet composition is fixed: ``plan``
         is a ``repro.fl.dynamics.RoundPlan`` (available / sampled /
-        survivors / dropped client ids + straggler time draws)."""
+        survivors / dropped / late client ids + straggler time draws)."""
+
+    def on_server_update(self, engine, update) -> None:
+        """Fires every time the aggregator turns buffered client
+        reports into an applied ``ServerUpdate`` — once per round under
+        the sync barrier, possibly several times (or zero) per round
+        under FedBuff. ``engine.params`` already includes the update."""
 
     def on_round_end(self, engine, record) -> None:
         pass
@@ -61,6 +67,11 @@ class LoggingCallback(RoundCallback):
         if r.dropped:       # seed format preserved unless dynamics bite
             line += (f" part={len(r.participants)}/{len(r.participants) + len(r.dropped)}"
                      f" drop={len(r.dropped)}")
+        if r.late_arrivals:  # async aggregation delivered late reports
+            line += (f" late={len(r.late_arrivals)}"
+                     f" stale={r.mean_staleness:.2f}")
+        if r.updates_applied != 1:   # not the plain one-barrier round
+            line += f" upd={r.updates_applied}"
         self.log(line)
 
 

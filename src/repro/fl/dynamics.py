@@ -254,6 +254,13 @@ class StragglerModel:
               ) -> Tuple[List[int], List[int], List[float]]:
         raise NotImplementedError
 
+    def late_rounds(self, time: float) -> Optional[int]:
+        """How many rounds after its training round a deadline-missing
+        report arrives at the server (for aggregators that accept late
+        reports). ``None`` = the report is lost forever; the base model
+        keeps no clock, so misses are losses."""
+        return None
+
 
 class NoStragglers(StragglerModel):
     """Every sampled client finishes. Consumes no randomness."""
@@ -304,6 +311,16 @@ class DeadlineStragglers(StragglerModel):
         dropped = [i for i, t in enumerate(times) if t > self.deadline]
         return survivors, dropped, times
 
+    def late_rounds(self, time):
+        """A round lasts one deadline of wall clock, so a client that
+        finishes at ``time`` delivers ceil(time/deadline) - 1 rounds
+        after the one it trained in. deadline<=0 has no round length to
+        measure lateness in, so misses stay losses."""
+        if self.deadline <= 0.0:
+            return None
+        late = math.ceil(time / self.deadline) - 1
+        return late if late >= 1 else None
+
 
 # ---------------------------------------------------------------------------
 # the bundle
@@ -319,6 +336,9 @@ class RoundPlan:
     survivors: Tuple[int, ...]     # reported before the deadline
     dropped: Tuple[int, ...]       # sampled but missed the deadline
     times: Tuple[float, ...] = ()  # straggler draws (aligned to sampled)
+    # deadline-missers whose report will still arrive in a later round
+    # (subset of ``dropped``; empty unless the aggregator accepts late)
+    late: Tuple[int, ...] = ()
 
 
 @dataclass

@@ -1,22 +1,34 @@
 """The composable federated engine (Algorithm 1 as pure control flow).
 
-``FederatedEngine`` wires five independently replaceable pieces:
+``FederatedEngine`` wires six independently replaceable pieces:
 
-    strategy  — FederatedStrategy: knobs / aggregation / dual state
-    executor  — ClientExecutor: how LocalTrain actually runs (sequential
-                Python loop vs one jitted vmap over stacked clients)
-    profiles  — DeviceProfile map: per-device-class budgets + resource
-                models (the paper's homogeneous fleet is the default)
-    dynamics  — FleetDynamics: availability gating x client sampling x
-                deadline stragglers (the default bundle reproduces the
-                always-available uniform-K-of-N loop bit-for-bit)
-    callbacks — RoundCallback hooks for logging / checkpoints / timing
+    strategy   — FederatedStrategy: knobs / pure delta combination /
+                 dual state
+    executor   — ClientExecutor: how LocalTrain actually runs
+                 (sequential Python loop vs one jitted vmap over
+                 stacked clients)
+    profiles   — DeviceProfile map: per-device-class budgets + resource
+                 models (the paper's homogeneous fleet is the default)
+    dynamics   — FleetDynamics: availability gating x client sampling x
+                 deadline stragglers (the default bundle reproduces the
+                 always-available uniform-K-of-N loop bit-for-bit)
+    aggregator — Aggregator: *when* client reports become server
+                 updates (sync barrier / FedBuff buffered async /
+                 staleness-discounted late delivery / masked sums)
+    callbacks  — RoundCallback hooks for logging / checkpoints / timing
 
-Round composition is per-round state, not a static list: the engine
-asks ``dynamics`` who is reachable, who is picked, and who reported
-before the deadline; only the *survivors* feed aggregation (weights
-renormalized over them) and the CAFL-L dual update, and dropped
-clients' token budgets are carried to their next participation.
+The loop is event-driven over client reports: every finished client
+becomes a ``ClientReport`` (delta, weight, arrival time, staleness,
+profile) fed to ``aggregator.submit``; the aggregator decides when a
+``ServerUpdate`` is applied. With an ``accepts_late`` aggregator,
+clients that miss the round deadline are still executed and their
+report is delivered in the round their ``StragglerModel`` wall-clock
+draw lands in, with ``staleness = delivery_round - training_round`` —
+late work is *used* instead of discarded. While the report is in
+flight the client is busy (off the sampling roster); at run end the
+engine drains any partial async buffer (``Aggregator.finalize``).
+Only truly lost clients (no arrival time, a barrier aggregator, or a
+delivery past the run horizon) feed the dropout ledger.
 
 ``repro.core.server.run_federated`` is a thin wrapper over this class
 that preserves the seed API exactly.
@@ -37,6 +49,8 @@ from repro.core.resources import ResourceModel, calibrate
 from repro.core.server import FLResult, RoundRecord, make_eval_fn
 from repro.data.federated import FederatedData
 from repro.data.shakespeare import CharDataset
+from repro.fl.aggregator import (Aggregator, ClientReport, ServerUpdate,
+                                 make_aggregator)
 from repro.fl.callbacks import RoundCallback
 from repro.fl.device import (DEFAULT_PROFILE, ClientInfo, DeviceProfile,
                              uniform_fleet)
@@ -55,6 +69,7 @@ class FederatedEngine:
                  profiles: Optional[Dict[str, DeviceProfile]] = None,
                  client_profiles: Optional[Sequence[str]] = None,
                  dynamics: Optional[FleetDynamics] = None,
+                 aggregator: Union[str, Aggregator, None] = None,
                  callbacks: Sequence[RoundCallback] = (),
                  resources: Optional[ResourceModel] = None,
                  init_duals: Optional[DualState] = None):
@@ -74,6 +89,7 @@ class FederatedEngine:
         self._profiles_raw = profiles
         self._client_profiles = list(client_profiles)
         self.dynamics = dynamics or FleetDynamics.default(fl)
+        self.aggregator = make_aggregator(aggregator or fl.aggregator, fl)
         self.callbacks = list(callbacks)
         self._base_resources = resources
 
@@ -110,6 +126,23 @@ class FederatedEngine:
         for cb in self.callbacks:
             getattr(cb, hook)(self, *args)
 
+    def _report(self, ci: ClientInfo, kn, policy_kn, out, rnd: int,
+                arrival: float) -> ClientReport:
+        """Wrap one executor result as the server-side report event.
+        ``weight`` routes the client's example count into aggregation —
+        the single source every combine path reads it from."""
+        usage = ci.profile.resources.usage(out.params_active, kn)
+        energy = ci.profile.resources.usage(out.params_active, kn,
+                                            include_accum=True)["energy"]
+        return ClientReport(client=ci, delta=out.delta,
+                            weight=float(ci.shard_size), knobs=kn,
+                            policy_knobs=policy_kn, round_trained=rnd,
+                            arrival_time=arrival,
+                            train_loss=out.train_loss,
+                            wire_mb_actual=out.wire_mb_actual,
+                            params_active=out.params_active,
+                            usage=usage, energy_true=energy)
+
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None, init_params=None) -> FLResult:
         fl = self.fl
@@ -122,7 +155,16 @@ class FederatedEngine:
 
         dynamics = self.dynamics
         dynamics.reset()
+        agg = self.aggregator
+        agg.reset(self.strategy.aggregate)
         fleet = [self._client_info(c) for c in range(fl.num_clients)]
+        # in-flight late reports: delivery round -> reports, plus the
+        # busy set (client_id -> delivery round): a straggler is still
+        # *training* until its wall clock ends, so it cannot be offered
+        # to the sampler again before its report lands — otherwise a 2x
+        # slow device would contribute 2x concurrent client-rounds
+        pending: Dict[int, List[ClientReport]] = {}
+        busy_until: Dict[int, int] = {}
 
         self.params = params
         self._emit("on_train_start")
@@ -132,55 +174,102 @@ class FederatedEngine:
             val_loss = evaluate(params)
 
             # --- round composition: gate, sample, deadline -------------
+            for cid in [c for c, due in busy_until.items() if due < t]:
+                del busy_until[cid]
+            roster = ([ci for ci in fleet if ci.client_id not in busy_until]
+                      if busy_until else fleet)
             avail, clients = dynamics.compose(
-                t, fleet, rng, self.strategy.duals_snapshot())
+                t, roster, rng, self.strategy.duals_snapshot())
             base_knobs = self.strategy.configure_round(t, clients)
             knobs = dynamics.adjust_knobs(clients, base_knobs)
             surv_idx, drop_idx, times = dynamics.finish(t, clients, knobs,
                                                         rng)
+            # deadline-missers split into late (report still arrives,
+            # if the aggregator takes it and the run is still going at
+            # delivery time) vs lost (discarded for good: no arrival
+            # clock, a barrier aggregator, or due past the horizon —
+            # work the simulation would pay for but could never apply)
+            late_idx: List[int] = []
+            lost_idx: List[int] = []
+            due_round: Dict[int, int] = {}
+            for i in drop_idx:
+                delay = (dynamics.stragglers.late_rounds(times[i])
+                         if agg.accepts_late and times else None)
+                if delay is not None and t + delay <= rounds:
+                    late_idx.append(i)
+                    due_round[i] = t + delay
+                else:
+                    lost_idx.append(i)
             survivors = [clients[i] for i in surv_idx]
-            surv_knobs = [knobs[i] for i in surv_idx]
             plan = RoundPlan(
                 round=t,
                 available=tuple(ci.client_id for ci in avail),
                 sampled=tuple(ci.client_id for ci in clients),
                 survivors=tuple(ci.client_id for ci in survivors),
                 dropped=tuple(clients[i].client_id for i in drop_idx),
-                times=tuple(times))
+                times=tuple(times),
+                late=tuple(clients[i].client_id for i in late_idx))
             self._emit("on_round_composed", plan)
-            if drop_idx:
-                self.strategy.on_dropout([clients[i] for i in drop_idx])
+            if lost_idx:
+                self.strategy.on_dropout([clients[i] for i in lost_idx])
+            agg.begin_round(t, clients)
 
-            # --- LocalTrain for the cohort; only survivors report ------
-            outs = (executor.run_round(params,
-                                       list(zip(survivors, surv_knobs)))
-                    if survivors else [])
-            if outs:
-                weights = [float(ci.shard_size) for ci in survivors]
-                delta = self.strategy.aggregate([o.delta for o in outs],
-                                                weights)
-                params = aggregation.apply_delta(params, delta)
+            # --- LocalTrain: survivors report now, late clients'
+            # reports are queued for the round their clock lands in ----
+            exec_idx = list(surv_idx) + late_idx
+            outs = (executor.run_round(
+                params, [(clients[i], knobs[i]) for i in exec_idx])
+                if exec_idx else [])
+            reports = {
+                i: self._report(clients[i], knobs[i], base_knobs[i], o, t,
+                                times[i] if times else 0.0)
+                for i, o in zip(exec_idx, outs)}
+            for i in late_idx:
+                pending.setdefault(due_round[i], []).append(reports[i])
+                busy_until[clients[i].client_id] = due_round[i]
+
+            # --- deliver reports; the aggregator decides when they
+            # become server updates ------------------------------------
+            arrived = sorted(pending.pop(t, ()),
+                             key=lambda r: (r.round_trained, r.arrival_time))
+            inbox = arrived + [reports[i] for i in surv_idx]
+            applied: List[ServerUpdate] = []
+
+            def _apply(update, params):
+                params = aggregation.apply_delta(params, update.delta)
                 self.params = params
-            dynamics.settle(clients, base_knobs, knobs, surv_idx, drop_idx)
+                applied.append(update)
+                self._emit("on_server_update", update)
+                return params
 
-            # --- constraint accounting over the clients that reported --
-            usages = [ci.profile.resources.usage(o.params_active, kn)
-                      for ci, kn, o in zip(survivors, surv_knobs, outs)]
-            energy_true = [
-                ci.profile.resources.usage(o.params_active, kn,
-                                           include_accum=True)["energy"]
-                for ci, kn, o in zip(survivors, surv_knobs, outs)]
-            if usages:
+            for rep in inbox:
+                rep.round_submitted = t
+                rep.staleness = t - rep.round_trained
+                update = agg.submit(rep)
+                if update is not None:
+                    params = _apply(update, params)
+            update = agg.flush(t)
+            if update is not None:
+                params = _apply(update, params)
+            dynamics.settle(clients, base_knobs, knobs,
+                            list(surv_idx) + late_idx, lost_idx)
+
+            # --- constraint accounting over the reports delivered -----
+            usages = [rep.usage for rep in inbox]
+            if inbox:
                 usage = {r: float(np.mean([u[r] for u in usages]))
                          for r in RESOURCES}
-                train_loss = float(np.mean([o.train_loss for o in outs]))
-                wire_mb = float(np.mean([o.wire_mb_actual for o in outs]))
-                energy = float(np.mean(energy_true))
+                train_loss = float(np.mean([rep.train_loss
+                                            for rep in inbox]))
+                wire_mb = float(np.mean([rep.wire_mb_actual
+                                         for rep in inbox]))
+                energy = float(np.mean([rep.energy_true for rep in inbox]))
             else:               # everyone dropped / nobody reachable
                 usage = {r: 0.0 for r in RESOURCES}
                 train_loss = wire_mb = energy = 0.0
             ratios = usage_ratios(usage, fl.budgets)
-            duals_by_profile = self.strategy.update_state(usages, survivors)
+            duals_by_profile = self.strategy.update_state(
+                usages, [rep.client for rep in inbox])
 
             # record the strategy's policy knobs, not any one client's
             # private carry boost (that stays visible via RoundPlan)
@@ -194,14 +283,33 @@ class FederatedEngine:
                 energy_true=energy,
                 seconds=time.time() - t0,
                 per_profile=_per_profile_record(
-                    survivors, [base_knobs[i] for i in surv_idx], usages,
+                    [rep.client for rep in inbox],
+                    [rep.policy_knobs for rep in inbox], usages,
                     duals_by_profile)
-                if heterogeneous and survivors else {},
-                participants=[ci.client_id for ci in survivors],
-                dropped=[clients[i].client_id for i in drop_idx],
-                num_available=len(avail))
+                if heterogeneous and inbox else {},
+                participants=[rep.client.client_id for rep in inbox],
+                dropped=[clients[i].client_id for i in lost_idx],
+                num_available=len(avail),
+                updates_applied=len(applied),
+                reports_applied=sum(len(u.reports) for u in applied),
+                mean_staleness=(float(np.mean([rep.staleness
+                                               for rep in inbox]))
+                                if inbox else 0.0),
+                late_arrivals=[rep.client.client_id for rep in arrived])
             result.history.append(record)
             self._emit("on_round_end", record)
+
+        # drain whatever the policy still buffers (e.g. FedBuff's
+        # partial buffer): those clients were executed, accounted and
+        # debt-settled, so their work must reach the final params
+        update = agg.finalize(rounds)
+        if update is not None:
+            params = aggregation.apply_delta(params, update.delta)
+            self.params = params
+            self._emit("on_server_update", update)
+            last = result.history[-1]
+            last.updates_applied += 1
+            last.reports_applied += len(update.reports)
 
         result.final_params = params
         result.history[-1].val_loss = evaluate(params)

@@ -4,8 +4,15 @@ A ``FederatedStrategy`` answers the three server-side questions of
 Algorithm 1, each independently replaceable:
 
     configure_round(rnd, clients) -> per-client Knobs      (lines 5-8)
-    aggregate(deltas, weights)    -> server update tree    (line 15)
+    aggregate(deltas, weights)    -> combined delta tree   (line 15)
     update_state(usages, clients) -> per-profile duals     (line 17)
+
+``aggregate`` is *pure delta combination*: the when/which of server
+updates (round barrier, FedBuff buffering, staleness discounts, masked
+sums, dropout renormalization) lives in ``repro.fl.aggregator``, which
+routes every client's example count through ``ClientReport.weight``
+and binds this method as its combine function — so ``ServerOpt`` and
+weighted variants compose with every server-update policy.
 
 ``FedAvg`` fixes the knobs and averages; ``CAFLL`` runs the paper's
 Lagrangian loop with one dual state *per device profile*; ``ServerOpt``
@@ -38,9 +45,10 @@ class FederatedStrategy:
         raise NotImplementedError
 
     def aggregate(self, deltas: Sequence, weights: Optional[List[float]] = None):
-        """Merge client deltas into the server update. ``weights`` are the
-        clients' shard sizes; the base strategy ignores them (the paper
-        aggregates participating clients with a plain mean)."""
+        """Pure delta combination. ``weights`` are the clients' example
+        counts as routed by the aggregator (``ClientReport.weight``);
+        the base strategy ignores them (the paper aggregates
+        participating clients with a plain mean)."""
         return aggregation.aggregate(deltas)
 
     def update_state(self, usages: Sequence[Dict[str, float]],

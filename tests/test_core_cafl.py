@@ -93,6 +93,54 @@ def test_token_budget_accum_edges():
     assert token_budget_accum(FL, 1, 2) == -(-t_target // 2)
 
 
+def test_token_preservation_clamped():
+    """fl.token_preservation="clamped": Eq. 8 rounds *down*, so the
+    grad-accum boost can never train past the baseline round (the ceil
+    mode's overshoot is what starves tight straggler deadlines)."""
+    fl_c = FL.replace(token_preservation="clamped")
+    t_target = FL.s_base * FL.b_base
+    for s in (2, 3, 7, 10, 25, 40, 80):
+        for b in (4, 8, 11, 17, 32, 64):
+            ga_ceil = token_budget_accum(FL, s, b)
+            ga_cl = token_budget_accum(fl_c, s, b)
+            assert 1 <= ga_cl <= ga_ceil
+            if s * b <= t_target:
+                assert s * b * ga_cl <= t_target       # never overshoots
+                assert s * b * (ga_cl + 1) > t_target  # maximal under it
+    # the concrete overshoot: ceil inflates past the baseline round
+    # (deadline poison), clamped stays at or under it
+    s, b = 7, 11
+    assert token_budget_accum(FL, s, b) * s * b > t_target
+    assert token_budget_accum(fl_c, s, b) * s * b <= t_target
+    # ablation unaffected; unknown mode rejected
+    assert token_budget_accum(fl_c.replace(token_budget=False), 2, 2) == 1
+    with pytest.raises(ValueError):
+        token_budget_accum(FL.replace(token_preservation="banana"), 2, 2)
+
+
+def test_clamped_policy_never_blows_baseline_deadline():
+    """Under any dual pressure, clamped knobs keep the simulated round
+    time at or below one baseline round on calibration silicon — a
+    deadline >= 1.0 can no longer be starved by the accum boost."""
+    fl_c = FL.replace(token_preservation="clamped")
+    t_target = FL.s_base * FL.b_base
+    grid = (0.0, 0.3, 0.8, 2.0, 10.0)
+    for lam_e in grid:
+        for lam_t in grid:
+            st = DualState(lam={"energy": lam_e, "comm": 0.4,
+                                "memory": 0.7, "temp": lam_t})
+            kn_c = policy(st, fl_c)
+            assert kn_c.s * kn_c.grad_accum * kn_c.b <= t_target
+            # ...while ceil mode overshoots for at least some of these
+    overshoots = []
+    for lam in grid:
+        st = DualState(lam={"energy": lam, "comm": 0.4, "memory": 0.7,
+                            "temp": lam})
+        kn = policy(st, FL)
+        overshoots.append(kn.s * kn.grad_accum * kn.b > t_target)
+    assert any(overshoots)
+
+
 def test_aggregate_weighted():
     import jax.numpy as jnp
     from repro.core import aggregation
