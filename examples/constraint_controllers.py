@@ -1,0 +1,92 @@
+"""Constraint controllers: pluggable dual laws + dual-aware deadline
+control (the ``repro.constraints`` stack on a live engine).
+
+Part 1 (instant, proxy-only): the same calibrated constraint loop under
+the three shipped ``DualController`` laws — the paper's deadzone
+subgradient needs tens of rounds to walk a 5x comm blowout down to its
+budget; the violation-scaled adaptive step and the PI law close it in a
+couple.
+
+Part 2 (tiny engine runs): a fleet whose baseline round exactly misses
+a 0.7x-round straggler deadline. Under the paper knob policy every
+sampled client drops, so no report ever reaches the server and the dual
+update *starves* — the duals stay frozen at zero while the fleet burns
+budget, and the knobs that would have made clients faster never engage.
+``DeadlineAwareKnobPolicy`` watches the reported fraction, widens the
+deadline toward the arrival times the engine observed (plus headroom),
+and the Lagrangian loop comes back to life.
+
+    PYTHONPATH=src python examples/constraint_controllers.py
+
+(REPRO_EXAMPLE_ROUNDS caps the engine round budget for CI smoke runs.)
+"""
+import dataclasses
+import os
+
+from repro.configs import get_config, get_fl_config
+from repro.constraints import (proxy_control_loop, rounds_to_band,
+                               tail_worst_ratio)
+from repro.data import load_corpus
+from repro.fl import (DeadlineStragglers, FederatedEngine, FleetDynamics,
+                      UniformSampler)
+from repro.models import build
+
+ROUNDS = int(os.environ.get("REPRO_EXAMPLE_ROUNDS", "6"))
+
+# --- part 1: dual-controller laws on the calibrated proxy loop -----------
+fl0 = get_fl_config()
+band = 1.0 + fl0.duals.deadzone
+print("controller comparison (proxy loop, worst constraint ratio):")
+for name in ("deadzone", "adaptive", "pi"):
+    history = proxy_control_loop(fl0, controller=name, rounds=60)
+    hit = rounds_to_band(history, band)
+    print(f"  {name:9s} rounds to enter the {band:.2f} band: "
+          f"{hit if hit else '>60'}   tail worst ratio: "
+          f"{tail_worst_ratio(history):.2f}")
+
+# --- part 2: dual-aware deadline control on a live engine ----------------
+ds = load_corpus(target_bytes=60_000)
+cfg = get_config("charlm-shakespeare").replace(
+    vocab_size=max(ds.vocab_size, 64), num_layers=3, d_model=48,
+    num_heads=4, num_kv_heads=4, head_dim=12, d_ff=96)
+fl = get_fl_config().replace(
+    rounds=ROUNDS, num_clients=4, clients_per_round=2, s_base=3, b_base=8,
+    seq_len=16, eval_batches=1, eval_batch_size=8)
+fl = fl.replace(duals=dataclasses.replace(fl.duals, s_min=2, b_min=4))
+model = build(cfg)
+
+
+def dynamics():
+    # baseline knobs take exactly 1.0 round of wall clock; the 0.7x
+    # deadline is unmeetable, so without deadline control nobody ever
+    # reports (jitter 0 keeps it deterministic; carry-over off keeps
+    # the clock equal to the knob time)
+    return FleetDynamics(
+        sampler=UniformSampler(fl.clients_per_round),
+        stragglers=DeadlineStragglers.for_config(fl, deadline=0.7,
+                                                 jitter=0.0),
+        carryover_tokens=False)
+
+
+print(f"\ndual-aware deadline control ({ROUNDS} engine rounds, "
+      f"deadline 0.7x round):")
+for label, fl_run in (("paper policy", fl),
+                      ("deadline_aware", fl.replace(
+                          knob_policy="deadline_aware"))):
+    dyn = dynamics()
+    res_run = FederatedEngine(model, fl_run, ds, strategy="cafl",
+                              dynamics=dyn).run()
+    reported = sum(len(r.participants) for r in res_run.history)
+    dual_rounds = sum(1 for r in res_run.history
+                      if any(lam > 0.0 for lam in r.duals.values()))
+    last = res_run.history[-1]
+    print(f"  {label:15s} reports={reported:3d}  "
+          f"rounds with live duals={dual_rounds}/{ROUNDS}  "
+          f"final deadline={dyn.stragglers.deadline:.2f}  "
+          f"final lam_E={last.duals['energy']:.2f}")
+
+print("\nThe paper stack never widens the deadline: zero reports, zero "
+      "dual movement, frozen knobs. The deadline-aware policy reads the "
+      "observed arrival times, widens the deadline just past them, and "
+      "the dual update resumes — the constraint loop then shrinks the "
+      "knobs, which shortens the rounds it just made feasible.")

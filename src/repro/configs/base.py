@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -202,6 +202,18 @@ class FLConfig:
     # ("" = plain averaging; "adam" / "momentum" = FedAdam / FedAvgM)
     server_opt: str = ""
     server_lr: float = 0.1
+    # --- constraint stack (repro.constraints), CAFLL strategies only ---
+    # which resources are budgeted: "paper" (the four Appendix-A.1
+    # proxies) | "paper+wire_mb" style registry specs | a sequence of
+    # names / Constraint instances | a ConstraintSet
+    constraints: Any = "paper"
+    # dual-ascent law per constraint: "deadzone" (paper Eq. 4) |
+    # "adaptive" (violation-scaled step) | "pi" | a DualController
+    dual_controller: Any = "deadzone"
+    # duals -> knobs mapping: "paper" (Eq. 5-7) | "deadline_aware"
+    # (widens the straggler deadline when drops starve the dual update)
+    # | a KnobPolicy instance
+    knob_policy: Any = "paper"
 
     def replace(self, **kw) -> "FLConfig":
         return dataclasses.replace(self, **kw)

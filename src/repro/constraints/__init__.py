@@ -1,0 +1,34 @@
+"""First-class Constraint API: pluggable constraints x dual controllers
+x knob policies — the Lagrangian loop (paper Eq. 2-7) as three
+independently replaceable axes, mirroring what ``repro.fl.aggregator``
+did for the server-update path.
+
+    from repro.constraints import (make_constraints, PIController,
+                                   DeadlineAwareKnobPolicy)
+
+    strategy = CAFLL(fl, constraints="paper+wire_mb",
+                     controller=PIController(),
+                     knob_policy=DeadlineAwareKnobPolicy())
+
+or per-config: ``fl.constraints`` / ``fl.dual_controller`` /
+``fl.knob_policy`` (string registry + instance passthrough). The
+default stack — ``DeadzoneSubgradient`` + ``PaperKnobPolicy`` + the
+four paper proxies — reproduces the seed's dual/knob trajectories
+bit-for-bit (pinned by ``tests/golden/``).
+"""
+from repro.constraints.constraint import (  # noqa: F401
+    CONSTRAINT_REGISTRY, KNOB_GROUPS, Constraint, ConstraintReport,
+    ConstraintSet, make_constraints, paper_constraints,
+    register_constraint,
+)
+from repro.constraints.controllers import (  # noqa: F401
+    CONTROLLERS, AdaptiveStep, DeadzoneSubgradient, DualController,
+    PIController, make_controller,
+)
+from repro.constraints.knobs import (  # noqa: F401
+    KNOB_POLICIES, DeadlineAwareKnobPolicy, KnobPolicy, PaperKnobPolicy,
+    make_knob_policy,
+)
+from repro.constraints.sim import (  # noqa: F401
+    proxy_control_loop, rounds_to_band, tail_worst_ratio,
+)

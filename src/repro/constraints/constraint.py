@@ -1,0 +1,223 @@
+"""First-class constraints: what is budgeted, how it is measured.
+
+CAFL-L's Lagrangian loop (Eq. 2-4) is defined over an arbitrary set of
+per-round resource constraints ``u_j(w) <= b_j``; the paper instantiates
+four (energy / comm / memory / temperature, Appendix A.1 proxies) and
+the seed hard-coded that 4-tuple into the dual math. A ``Constraint``
+makes the set an open registry instead:
+
+    name        the dual variable's key (``DualState.lam[name]``)
+    measure     ClientReport -> per-client usage this round (the paper
+                proxies read ``report.usage[name]``; new constraints can
+                read anything the report carries — actual wire bytes,
+                arrival time, true accumulated energy)
+    budget_of   Budgets -> this constraint's bound b_j (per device
+                profile, since each profile carries its own Budgets)
+    knob_group  which Eq. 5-7 dual group the constraint's lambda joins
+                ("energy" | "comm" | "memory" | "temp" | None): the
+                paper's knob mapping is written over four grouped
+                multipliers, so a *new* constraint steers the knobs by
+                joining a group — or stays observational with None
+
+Registering a fifth constraint (e.g. ``wire_mb``, the measured wire
+bytes instead of the comm proxy) requires no change to the dual update
+or the knob policy: the controller runs one dual per registered
+constraint and ``PaperKnobPolicy`` folds grouped lambdas exactly as
+Eq. 5-7 did.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, Optional, Sequence, Tuple, Union
+
+from repro.configs.base import Budgets
+
+# the Eq. 5-7 dual groups (== the paper's four constraints)
+KNOB_GROUPS = ("energy", "comm", "memory", "temp")
+
+
+@dataclass(frozen=True)
+class Constraint:
+    """One budgeted resource: measurement + bound + knob coupling."""
+
+    name: str
+    measure: Callable[[Any], float]          # ClientReport -> usage
+    budget_of: Callable[[Budgets], float]    # profile budgets -> b_j
+    knob_group: Optional[str] = None         # Eq. 5-7 group or None
+
+    def __post_init__(self):
+        if self.knob_group is not None and self.knob_group not in KNOB_GROUPS:
+            raise ValueError(
+                f"constraint {self.name!r}: unknown knob_group "
+                f"{self.knob_group!r}; options: {', '.join(KNOB_GROUPS)}, None")
+
+
+@dataclass(frozen=True)
+class ConstraintReport:
+    """One constraint's accounting for one dual update (per profile):
+    the round's mean usage, the bound, their ratio, and the dual's move.
+    ``violated`` is the hard budget test u > b (the deadzone band is the
+    *controller's* stability device, not the constraint's semantics)."""
+
+    name: str
+    profile: str
+    usage: float
+    budget: float
+    ratio: float
+    lam_prev: float
+    lam: float
+    violated: bool
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"usage": self.usage, "budget": self.budget,
+                "ratio": self.ratio, "lam": self.lam,
+                "violated": self.violated}
+
+
+class ConstraintSet:
+    """An ordered collection of constraints — the object the strategy,
+    engine and knob policy share. Order is the dual-state key order."""
+
+    def __init__(self, constraints: Sequence[Constraint]):
+        names = [c.name for c in constraints]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate constraint names: {names}")
+        self.constraints: Tuple[Constraint, ...] = tuple(constraints)
+
+    def __iter__(self) -> Iterator[Constraint]:
+        return iter(self.constraints)
+
+    def __len__(self) -> int:
+        return len(self.constraints)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(c.name for c in self.constraints)
+
+    def measure(self, report) -> Dict[str, float]:
+        """Per-client measurement dict, keyed by constraint name — the
+        round telemetry the dual update consumes."""
+        return {c.name: float(c.measure(report)) for c in self.constraints}
+
+    def budgets_dict(self, budgets: Budgets) -> Dict[str, float]:
+        return {c.name: float(c.budget_of(budgets)) for c in self.constraints}
+
+    def ratios(self, usage: Dict[str, float],
+               budgets: Budgets) -> Dict[str, float]:
+        return {c.name: usage[c.name] / c.budget_of(budgets)
+                for c in self.constraints}
+
+    def zero_usage(self) -> Dict[str, float]:
+        return {c.name: 0.0 for c in self.constraints}
+
+    def init_lam(self) -> Dict[str, float]:
+        return {c.name: 0.0 for c in self.constraints}
+
+    def grouped_lam(self, lam: Dict[str, float]) -> Dict[str, float]:
+        """Fold per-constraint duals into the four Eq. 5-7 groups. With
+        the paper set this is the identity (each constraint is its own
+        group), so the default stack stays bit-for-bit."""
+        out = {g: 0.0 for g in KNOB_GROUPS}
+        for c in self.constraints:
+            if c.knob_group is not None:
+                out[c.knob_group] += lam.get(c.name, 0.0)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the paper's four constraints + registered extras
+# ---------------------------------------------------------------------------
+
+
+def _proxy(name: str, budget_of: Callable[[Budgets], float]) -> Constraint:
+    """One of the paper's Appendix-A.1 proxy constraints: measured from
+    the resource model's usage dict the engine stamps on every report."""
+    return Constraint(name=name, budget_of=budget_of,
+                      measure=lambda rep, _n=name: rep.usage[_n],
+                      knob_group=name)
+
+
+def paper_constraints() -> ConstraintSet:
+    """The paper's (E, C, M, T) tuple — the default stack and the one
+    the golden trajectories pin."""
+    return ConstraintSet([
+        _proxy("energy", lambda b: b.energy),
+        _proxy("comm", lambda b: b.comm_mb),
+        _proxy("memory", lambda b: b.memory),
+        _proxy("temp", lambda b: b.temp),
+    ])
+
+
+# registered constraints, instantiable by name. Each factory returns a
+# fresh Constraint so instances never share state.
+CONSTRAINT_REGISTRY: Dict[str, Callable[[], Constraint]] = {}
+
+
+def register_constraint(name: str,
+                        factory: Callable[[], Constraint]) -> None:
+    """Make ``name`` resolvable by ``make_constraints`` specs. Re-registering
+    a name overwrites (last wins), so experiments can shadow built-ins."""
+    CONSTRAINT_REGISTRY[name] = factory
+
+
+register_constraint("energy", lambda: _proxy("energy", lambda b: b.energy))
+register_constraint("comm", lambda: _proxy("comm", lambda b: b.comm_mb))
+register_constraint("memory", lambda: _proxy("memory", lambda b: b.memory))
+register_constraint("temp", lambda: _proxy("temp", lambda b: b.temp))
+
+
+register_constraint("wire_mb", lambda: Constraint(
+    # the *measured* wire bytes (quantized payload + scales), not the
+    # Appendix-A.1 comm proxy — held to the same comm budget, and its
+    # dual joins the comm group so violation drives compression (q)
+    name="wire_mb", measure=lambda rep: rep.wire_mb_actual,
+    budget_of=lambda b: b.comm_mb, knob_group="comm"))
+
+register_constraint("energy_true", lambda: Constraint(
+    # beyond-paper 'true compute': energy including the grad-accum
+    # microbatches Eq. 8 adds (the A.1 proxy deliberately omits them)
+    name="energy_true", measure=lambda rep: rep.energy_true,
+    budget_of=lambda b: b.energy, knob_group="energy"))
+
+register_constraint("latency", lambda: Constraint(
+    # straggler pressure: the client's simulated arrival time against
+    # one deadline unit. Observational (no knob group) — pair it with a
+    # DeadlineAwareKnobPolicy to act on it.
+    name="latency", measure=lambda rep: rep.arrival_time,
+    budget_of=lambda b: 1.0, knob_group=None))
+
+
+ConstraintSpec = Union[str, Constraint, ConstraintSet,
+                       Sequence[Union[str, Constraint]], None]
+
+
+def make_constraints(spec: ConstraintSpec = "paper") -> ConstraintSet:
+    """Resolve a constraint-stack spec:
+
+        "paper"                     the four proxies (default)
+        "paper+wire_mb"             the four plus registered extras
+        ["energy", Constraint(...)] mixed names / instances
+        ConstraintSet               passthrough
+    """
+    if spec is None:
+        return paper_constraints()
+    if isinstance(spec, ConstraintSet):
+        return spec
+    if isinstance(spec, Constraint):
+        return ConstraintSet([spec])
+    if isinstance(spec, str):
+        spec = spec.split("+")
+    out = []
+    for item in spec:
+        if isinstance(item, Constraint):
+            out.append(item)
+        elif item == "paper":
+            out.extend(paper_constraints())
+        elif item in CONSTRAINT_REGISTRY:
+            out.append(CONSTRAINT_REGISTRY[item]())
+        else:
+            raise ValueError(
+                f"unknown constraint {item!r}; options: paper, "
+                f"{', '.join(sorted(CONSTRAINT_REGISTRY))}, or a "
+                f"Constraint instance")
+    return ConstraintSet(out)

@@ -1,0 +1,202 @@
+"""Knob policies: duals -> training knobs (and, optionally, the server
+deadline).
+
+The paper's pi(lambda) (Eq. 5-7 + the compression rule) is one choice
+of how the dual pressure steers the client configuration; a
+``KnobPolicy`` makes it pluggable. Policies also get a per-round
+``observe`` hook with the round's composition (``RoundPlan``), the
+delivered reports, and the live ``FleetDynamics`` — this is where
+*server-side* knobs live: ``DeadlineAwareKnobPolicy`` widens the
+straggler deadline when the dropped fraction starves the dual update
+(no reports -> no usage telemetry -> duals frozen at their last value
+while the fleet burns budget), using the per-client arrival times the
+engine has exposed since the aggregator redesign.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Union
+
+from repro.configs.base import FLConfig
+from repro.core.duals import DualState
+from repro.core.policy import Knobs, policy
+from repro.constraints.constraint import ConstraintSet
+
+
+class KnobPolicy:
+    """Maps the dual state to this round's knobs.
+
+        knobs(duals, fl)              -> Knobs           (Eq. 5-7 seat)
+        observe(plan, reports, dyn)   -> None            (round telemetry)
+
+    ``observe`` fires once per round after constraint accounting; the
+    default is a no-op, so purely dual-driven policies stay pure.
+    """
+
+    name = "base"
+
+    def reset(self) -> None:
+        pass
+
+    def knobs(self, duals: DualState, fl: FLConfig) -> Knobs:
+        raise NotImplementedError
+
+    def observe(self, plan, reports: Sequence, dynamics) -> None:
+        pass
+
+    def state_snapshot(self) -> Dict[str, Any]:
+        return {"name": self.name}
+
+
+class PaperKnobPolicy(KnobPolicy):
+    """The paper's Eq. 5-7 mapping + compression rule, generalized to an
+    arbitrary constraint stack: per-constraint duals are folded into the
+    four knob groups (``Constraint.knob_group``) and handed to the
+    original mapping. With the paper's four constraints the fold is the
+    identity, so the default stack is bit-for-bit the seed's
+    ``core.policy.policy`` (the golden trajectories pin it)."""
+
+    name = "paper"
+
+    def __init__(self, constraints: Optional[ConstraintSet] = None):
+        self.constraints = constraints
+
+    def knobs(self, duals, fl):
+        lam = duals.lam
+        if self.constraints is not None:
+            lam = self.constraints.grouped_lam(lam)
+        return policy(DualState(lam=lam), fl)
+
+
+class DeadlineAwareKnobPolicy(KnobPolicy):
+    """Dual-aware deadline control, wrapped around any base policy.
+
+    Under a tight straggler deadline the constraint loop can deadlock:
+    every sampled client misses, no report reaches the server, the dual
+    update starves (usage telemetry is exactly the reports), so the
+    duals never shrink the knobs that would make clients faster — and
+    the carry-over debt boost makes the next attempt slower still.
+
+    This policy watches each round's reported fraction. When it falls
+    below ``min_report_frac`` it widens the deadline toward the arrival
+    time the target fraction would have needed (the engine's per-client
+    wall-clock draws, ``plan.times``) plus ``headroom`` — sitting
+    exactly on the needed time would re-drop the fleet on the next
+    float-rounding wobble — capped at ``max_scale`` x the original
+    deadline. When the fleet fully reports it relaxes the deadline by
+    ``relax`` per round, but never below what this round's slowest
+    arrival (plus headroom) needed, so relaxation cannot re-starve the
+    very clients it just recovered. The training-knob mapping is
+    delegated to ``base`` untouched.
+    """
+
+    name = "deadline_aware"
+
+    def __init__(self, base: Optional[KnobPolicy] = None,
+                 min_report_frac: float = 0.5, widen: float = 1.3,
+                 max_scale: float = 4.0, relax: float = 0.9,
+                 headroom: float = 1.05):
+        assert 0.0 < min_report_frac <= 1.0
+        assert widen > 1.0 and max_scale >= 1.0 and 0.0 < relax <= 1.0
+        assert headroom >= 1.0
+        self.base = base or PaperKnobPolicy()
+        self.min_report_frac = min_report_frac
+        self.widen = widen
+        self.max_scale = max_scale
+        self.relax = relax
+        self.headroom = headroom
+        self.scale = 1.0
+        self._base_deadline: Optional[float] = None
+        self._strag = None              # the straggler model we widened
+
+    def reset(self) -> None:
+        self.base.reset()
+        if self._strag is not None and self._base_deadline is not None:
+            # undo the widening: otherwise a later run (or a fresh
+            # engine sharing this instance) would capture the widened
+            # deadline as its new base and ratchet upward forever
+            self._strag.deadline = self._base_deadline
+        self.scale = 1.0
+        self._base_deadline = None
+        self._strag = None
+
+    def knobs(self, duals, fl):
+        return self.base.knobs(duals, fl)
+
+    def _needed_scale(self, time: float) -> float:
+        return time * self.headroom / self._base_deadline
+
+    def observe(self, plan, reports, dynamics) -> None:
+        strag = getattr(dynamics, "stragglers", None)
+        deadline = getattr(strag, "deadline", None)
+        if deadline is None or not plan.sampled:
+            return                      # no deadline to control
+        if self._base_deadline is None:
+            self._base_deadline = deadline
+            self._strag = strag
+        frac = len(plan.survivors) / len(plan.sampled)
+        if frac < self.min_report_frac:
+            # widen at least multiplicatively, and directly to the
+            # arrival time the target fraction would have needed when
+            # the round's wall-clock draws say where that is
+            scale = self.scale * self.widen
+            if plan.times:
+                k = max(0, math.ceil(self.min_report_frac
+                                     * len(plan.times)) - 1)
+                scale = max(scale, self._needed_scale(sorted(plan.times)[k]))
+            self.scale = min(self.max_scale, scale)
+        elif frac >= 1.0 and self.scale > 1.0:
+            # a fully reporting fleet earns a tighter deadline, bounded
+            # by what its slowest member demonstrably needed
+            floor = max((self._needed_scale(t) for t in plan.times),
+                        default=1.0)
+            self.scale = min(self.scale,
+                             max(1.0, self.scale * self.relax, floor))
+        strag.deadline = self._base_deadline * self.scale
+
+    def state_snapshot(self):
+        return {"name": self.name, "scale": self.scale,
+                "base_deadline": self._base_deadline,
+                "base_policy": self.base.state_snapshot()}
+
+
+KNOB_POLICIES = ("paper", "deadline_aware")
+
+KnobPolicySpec = Union[str, KnobPolicy, None]
+
+
+def _thread_constraints(pol: KnobPolicy,
+                        constraints: Optional[ConstraintSet]) -> None:
+    """Fill an unspecified constraint fold (``PaperKnobPolicy`` built
+    with ``constraints=None``) with the strategy's set, recursing into
+    wrapper policies' ``base`` — so ``knob_policy=DeadlineAwareKnobPolicy()``
+    behaves identically to the ``"deadline_aware"`` string spec under a
+    custom constraint stack. An explicitly-set fold is left alone."""
+    if constraints is None:
+        return
+    if isinstance(pol, PaperKnobPolicy) and pol.constraints is None:
+        pol.constraints = constraints
+    base = getattr(pol, "base", None)
+    if isinstance(base, KnobPolicy):
+        _thread_constraints(base, constraints)
+
+
+def make_knob_policy(spec: KnobPolicySpec = "paper",
+                     constraints: Optional[ConstraintSet] = None,
+                     **kw) -> KnobPolicy:
+    """Resolve a knob-policy spec: strings name a policy; instances pass
+    through. Either way the strategy's constraint set is threaded into
+    any paper mapping whose fold was left unspecified."""
+    if spec is None:
+        spec = "paper"
+    if isinstance(spec, KnobPolicy):
+        _thread_constraints(spec, constraints)
+        return spec
+    name = spec.lower()
+    if name == "paper":
+        return PaperKnobPolicy(constraints=constraints, **kw)
+    if name in ("deadline_aware", "deadline"):
+        kw.setdefault("base", PaperKnobPolicy(constraints=constraints))
+        return DeadlineAwareKnobPolicy(**kw)
+    raise ValueError(f"unknown knob policy {spec!r}; "
+                     f"options: {', '.join(KNOB_POLICIES)}")

@@ -1,0 +1,69 @@
+"""Proxy-only constraint-loop simulation: the Lagrangian dynamics with
+no NN in the loop (usage comes straight from the calibrated Appendix-A.1
+resource model), so a controller or knob-policy choice can be evaluated
+in milliseconds. Shared by ``benchmarks/fl_engine_bench.py`` and
+``examples/constraint_controllers.py`` — one definition of the loop, so
+the benchmark and the example can never drift apart.
+
+The measurement source is the ``ResourceModel`` proxy dict, so the
+simulated constraint set must only name proxy resources (the paper
+four); report-derived constraints (``wire_mb``, ``latency``) need the
+real engine.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.configs.base import FLConfig
+from repro.constraints.constraint import make_constraints
+from repro.constraints.controllers import make_controller
+from repro.constraints.knobs import make_knob_policy
+from repro.core.duals import DualState
+from repro.core.policy import Knobs
+from repro.core.resources import calibrate
+
+# the active-parameter fit used by the sweep/bench examples: freezing k
+# of k_base layer groups keeps ~6% (embeddings/head) always trainable
+ACTIVE_FLOOR = 0.06
+
+
+def proxy_control_loop(fl: FLConfig, controller="deadzone",
+                       rounds: int = 80, p_base: float = 1.9e6,
+                       constraints="paper", knob_policy="paper"
+                       ) -> List[Tuple[Knobs, dict]]:
+    """Roll the duals->knobs->usage->duals loop forward ``rounds`` steps
+    and return the per-round ``(knobs, {constraint: ratio})`` history."""
+    cset = make_constraints(constraints)
+    ctrl = make_controller(controller)
+    pol = make_knob_policy(knob_policy, constraints=cset)
+    res = calibrate(p_base, fl)
+    duals = DualState(lam=cset.init_lam())
+    history = []
+    for _ in range(rounds):
+        kn = pol.knobs(duals, fl)
+        p_active = p_base * ((1 - ACTIVE_FLOOR) * kn.k / fl.k_base
+                             + ACTIVE_FLOOR)
+        usage = res.usage(p_active, kn)
+        ratios = cset.ratios(usage, fl.budgets)
+        duals = DualState(lam={
+            c.name: ctrl.step(c.name, duals.lam[c.name], ratios[c.name],
+                              fl.duals)
+            for c in cset})
+        history.append((kn, ratios))
+    return history
+
+
+def rounds_to_band(history, band: float) -> Optional[int]:
+    """First round (1-based) whose *worst* constraint ratio is inside
+    the satisfaction band (<= band), or None if it never enters."""
+    for i, (_, ratios) in enumerate(history):
+        if max(ratios.values()) <= band:
+            return i + 1
+    return None
+
+
+def tail_worst_ratio(history, tail: int = 10) -> float:
+    """Mean worst-constraint ratio over the last ``tail`` rounds — the
+    steady-state violation a controller settles at."""
+    window = history[-tail:]
+    return sum(max(r.values()) for _, r in window) / len(window)

@@ -6,6 +6,15 @@
 The dead-zone dz(.) returns 0 inside [1 - delta, 1 + delta] and the signed
 excess (u/b - 1) outside — the stability device the paper uses so duals do
 not chatter when usage hovers at the budget.
+
+Since the Constraint API landed, the general machinery lives in
+``repro.constraints``: constraints are an open registry (not this
+module's fixed 4-tuple), the update law is a pluggable
+``DualController`` (``dual_update`` below delegates to the default
+``DeadzoneSubgradient`` — same arithmetic, pinned by the golden
+trajectories), and the duals->knobs mapping is a ``KnobPolicy``. This
+module keeps the paper-shaped helpers (``RESOURCES``, ``DualState``,
+``deadzone``, ratio/Lagrangian accounting) every seed call site uses.
 """
 from __future__ import annotations
 
@@ -26,6 +35,9 @@ def budgets_dict(budgets: Budgets) -> Dict[str, float]:
 
 @dataclass
 class DualState:
+    """One multiplier per constraint. Defaults to the paper's four;
+    a custom constraint stack simply keys more (or other) names."""
+
     lam: Dict[str, float] = field(
         default_factory=lambda: {r: 0.0 for r in RESOURCES})
 
@@ -48,12 +60,14 @@ def usage_ratios(usage: Dict[str, float], budgets: Budgets) -> Dict[str, float]:
 
 def dual_update(state: DualState, usage: Dict[str, float], budgets: Budgets,
                 cfg: DualConfig) -> DualState:
-    """One server-side dual ascent step (Algorithm 1, line 17)."""
+    """One server-side dual ascent step (Algorithm 1, line 17) over the
+    paper's four resources. Kept as the seed-compatible entry point;
+    the law itself is ``repro.constraints.DeadzoneSubgradient`` (other
+    controllers plug in through ``CAFLL(controller=...)``)."""
+    from repro.constraints.controllers import DeadzoneSubgradient
+    ctrl = DeadzoneSubgradient()
     ratios = usage_ratios(usage, budgets)
-    new = {}
-    for r in RESOURCES:
-        lam = state.lam[r] + cfg.eta * deadzone(ratios[r], cfg.deadzone)
-        new[r] = float(min(max(lam, 0.0), cfg.lambda_max))
+    new = {r: ctrl.step(r, state.lam[r], ratios[r], cfg) for r in RESOURCES}
     return DualState(lam=new)
 
 

@@ -34,9 +34,15 @@ Q_THRESHOLDS = (0.25, 1.0)  # lam_C above these -> q=1, q=2
 
 
 def policy(duals: DualState, fl: FLConfig) -> Knobs:
+    """The paper's Eq. 5-7 mapping over the four canonical dual groups.
+    ``repro.constraints.PaperKnobPolicy`` wraps this (folding any extra
+    constraints' duals into the groups first); other mappings plug in as
+    alternative ``KnobPolicy`` implementations. Missing groups read as
+    zero pressure so reduced constraint stacks stay usable."""
     d: DualConfig = fl.duals
-    lam_e, lam_c, lam_m, lam_t = (duals.lam["energy"], duals.lam["comm"],
-                                  duals.lam["memory"], duals.lam["temp"])
+    lam = duals.lam
+    lam_e, lam_c, lam_m, lam_t = (lam.get("energy", 0.0), lam.get("comm", 0.0),
+                                  lam.get("memory", 0.0), lam.get("temp", 0.0))
     k = max(d.k_min, fl.k_base
             - math.floor(d.alpha_k * (lam_c + lam_m + 0.5 * lam_t)))
     s = max(d.s_min, math.floor(fl.s_base * (1 - d.beta_s * (lam_e + lam_t))))

@@ -66,6 +66,12 @@ class RoundRecord:
     # aggregator this round (an async policy may buffer it and apply
     # it in a later update — see updates_applied/reports_applied)
     late_arrivals: List[int] = field(default_factory=list)
+    # --- constraint stack (repro.constraints) ---
+    # per-constraint accounting for the default profile:
+    # {name: {"ratio": u/b, "lam": dual after this round's update,
+    #         "violated": u > b}} — every registered constraint appears,
+    # not just the paper's four (empty for pre-refactor records)
+    constraints: Dict[str, Dict] = field(default_factory=dict)
 
 
 @dataclass

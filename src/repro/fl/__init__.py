@@ -12,6 +12,13 @@ FleetDynamics x Aggregator x Callback, replacing the seed's monolithic
 
 The seed API (``repro.core.run_federated``) remains a thin wrapper.
 """
+from repro.constraints import (  # noqa: F401
+    AdaptiveStep, Constraint, ConstraintReport, ConstraintSet,
+    DeadlineAwareKnobPolicy, DeadzoneSubgradient, DualController,
+    KnobPolicy, PIController, PaperKnobPolicy, make_constraints,
+    make_controller, make_knob_policy, paper_constraints,
+    register_constraint,
+)
 from repro.core.client import ClientResult, ClientRunner  # noqa: F401
 from repro.core.server import FLResult, RoundRecord  # noqa: F401
 from repro.fl.aggregator import (  # noqa: F401

@@ -34,6 +34,14 @@ class RoundCallback:
         the sync barrier, possibly several times (or zero) per round
         under FedBuff. ``engine.params`` already includes the update."""
 
+    def on_dual_update(self, engine, rnd: int, constraint_reports) -> None:
+        """Fires after the strategy's dual update, rounds where one ran
+        (a dual-free strategy, or a round with no delivered reports,
+        never fires it). ``constraint_reports`` maps each device-profile
+        name to its list of ``repro.constraints.ConstraintReport``
+        (usage / budget / ratio / lam move / violated, one per
+        registered constraint)."""
+
     def on_round_end(self, engine, record) -> None:
         pass
 

@@ -3,7 +3,14 @@
 ``FederatedEngine`` wires six independently replaceable pieces:
 
     strategy   — FederatedStrategy: knobs / pure delta combination /
-                 dual state
+                 dual state. A CAFLL strategy carries its own pluggable
+                 constraint stack (repro.constraints): the engine asks
+                 it what to *measure* (strategy.constraints), feeds the
+                 per-report measurements back for the dual update, then
+                 emits on_dual_update with the per-constraint reports
+                 and lets the strategy observe the round (plan, reports,
+                 dynamics) so knob policies can steer server-side knobs
+                 like the straggler deadline
     executor   — ClientExecutor: how LocalTrain actually runs
                  (sequential Python loop vs one jitted vmap over
                  stacked clients)
@@ -42,9 +49,10 @@ import jax
 import numpy as np
 
 from repro.configs.base import FLConfig
+from repro.constraints import ConstraintSet, paper_constraints
 from repro.core import aggregation
 from repro.core.client import ClientRunner
-from repro.core.duals import RESOURCES, DualState, usage_ratios
+from repro.core.duals import DualState
 from repro.core.resources import ResourceModel, calibrate
 from repro.core.server import FLResult, RoundRecord, make_eval_fn
 from repro.data.federated import FederatedData
@@ -152,9 +160,14 @@ class FederatedEngine:
         evaluate = make_eval_fn(self.model, self.dataset, fl)
         result = FLResult(method=self.strategy.name)
         heterogeneous = len(self.profiles) > 1
+        # what the server measures each round: the strategy's constraint
+        # set when it carries one (CAFLL), else the paper's four proxies
+        cset: ConstraintSet = (getattr(self.strategy, "constraints", None)
+                               or paper_constraints())
 
         dynamics = self.dynamics
         dynamics.reset()
+        self.strategy.reset()
         agg = self.aggregator
         agg.reset(self.strategy.aggregate)
         fleet = [self._client_info(c) for c in range(fl.num_clients)]
@@ -255,29 +268,41 @@ class FederatedEngine:
                             list(surv_idx) + late_idx, lost_idx)
 
             # --- constraint accounting over the reports delivered -----
-            usages = [rep.usage for rep in inbox]
+            usages = [cset.measure(rep) for rep in inbox]
             if inbox:
-                usage = {r: float(np.mean([u[r] for u in usages]))
-                         for r in RESOURCES}
+                usage = {n: float(np.mean([u[n] for u in usages]))
+                         for n in cset.names}
                 train_loss = float(np.mean([rep.train_loss
                                             for rep in inbox]))
                 wire_mb = float(np.mean([rep.wire_mb_actual
                                          for rep in inbox]))
                 energy = float(np.mean([rep.energy_true for rep in inbox]))
             else:               # everyone dropped / nobody reachable
-                usage = {r: 0.0 for r in RESOURCES}
+                usage = cset.zero_usage()
                 train_loss = wire_mb = energy = 0.0
-            ratios = usage_ratios(usage, fl.budgets)
+            ratios = cset.ratios(usage, fl.budgets)
             duals_by_profile = self.strategy.update_state(
                 usages, [rep.client for rep in inbox])
+            creports = self.strategy.constraint_reports()
+            if creports:
+                self._emit("on_dual_update", t, creports)
+            # round telemetry back to the strategy (knob policies may
+            # steer server-side knobs, e.g. widen the straggler
+            # deadline, before the next round is composed)
+            self.strategy.observe_round(plan, inbox, dynamics)
 
             # record the strategy's policy knobs, not any one client's
             # private carry boost (that stays visible via RoundPlan)
+            duals_rec = _default_duals(duals_by_profile, cset.names)
             record = RoundRecord(
                 round=t, val_loss=val_loss,
                 knobs=base_knobs[0].as_dict() if base_knobs else {},
                 usage=usage, ratios=ratios,
-                duals=_default_duals(duals_by_profile),
+                duals=duals_rec,
+                constraints={n: {"ratio": ratios[n],
+                                 "lam": duals_rec.get(n, 0.0),
+                                 "violated": ratios[n] > 1.0}
+                             for n in cset.names},
                 train_loss=train_loss,
                 wire_mb_actual=wire_mb,
                 energy_true=energy,
@@ -285,7 +310,7 @@ class FederatedEngine:
                 per_profile=_per_profile_record(
                     [rep.client for rep in inbox],
                     [rep.policy_knobs for rep in inbox], usages,
-                    duals_by_profile)
+                    duals_by_profile, cset)
                 if heterogeneous and inbox else {},
                 participants=[rep.client.client_id for rep in inbox],
                 dropped=[clients[i].client_id for i in lost_idx],
@@ -317,33 +342,34 @@ class FederatedEngine:
         return result
 
 
-def _default_duals(duals_by_profile: Dict[str, Dict[str, float]]
-                   ) -> Dict[str, float]:
+def _default_duals(duals_by_profile: Dict[str, Dict[str, float]],
+                   names) -> Dict[str, float]:
     """The record's back-compat scalar dual dict: the default profile's
     duals, the sole profile's, or zeros (fedavg keeps no duals)."""
     if DEFAULT_PROFILE in duals_by_profile:
         return dict(duals_by_profile[DEFAULT_PROFILE])
     if duals_by_profile:
         return dict(next(iter(duals_by_profile.values())))
-    return {r: 0.0 for r in RESOURCES}
+    return {n: 0.0 for n in names}
 
 
 def _per_profile_record(clients: List[ClientInfo], knobs, usages,
-                        duals_by_profile) -> Dict[str, Dict]:
+                        duals_by_profile,
+                        cset: ConstraintSet) -> Dict[str, Dict]:
     out: Dict[str, Dict] = {}
     for ci, kn, u in zip(clients, knobs, usages):
         name = ci.profile.name
         slot = out.setdefault(name, {"clients": 0, "knobs": kn.as_dict(),
-                                     "usage": {r: 0.0 for r in RESOURCES}})
+                                     "usage": cset.zero_usage()})
         slot["clients"] += 1
-        for r in RESOURCES:
-            slot["usage"][r] += u[r]
+        for n in cset.names:
+            slot["usage"][n] += u[n]
     for name, slot in out.items():
-        n = slot["clients"]
-        slot["usage"] = {r: v / n for r, v in slot["usage"].items()}
+        n_clients = slot["clients"]
+        slot["usage"] = {n: v / n_clients for n, v in slot["usage"].items()}
         profile = next(ci.profile for ci in clients
                        if ci.profile.name == name)
-        slot["ratios"] = usage_ratios(slot["usage"], profile.budgets)
+        slot["ratios"] = cset.ratios(slot["usage"], profile.budgets)
         if name in duals_by_profile:
             slot["duals"] = dict(duals_by_profile[name])
     return out

@@ -19,6 +19,14 @@ Lagrangian loop with one dual state *per device profile*; ``ServerOpt``
 wraps any strategy with a FedOpt-family server optimizer (FedAvgM /
 FedAdam) on the aggregated pseudo-gradient, proving the aggregation
 axis composes.
+
+``CAFLL``'s constraint loop is itself three pluggable axes
+(``repro.constraints``): which resources are budgeted (``Constraint``
+registry), how each dual answers its violation signal
+(``DualController``), and how the duals steer the knobs
+(``KnobPolicy``) — chosen per run via ``fl.constraints`` /
+``fl.dual_controller`` / ``fl.knob_policy`` or constructor kwargs. The
+default stack reproduces the seed trajectories bit-for-bit.
 """
 from __future__ import annotations
 
@@ -27,9 +35,11 @@ from typing import Dict, List, Optional, Sequence
 import jax
 
 from repro.configs.base import FLConfig
+from repro.constraints import (ConstraintReport, make_constraints,
+                               make_controller, make_knob_policy)
 from repro.core import aggregation
-from repro.core.duals import RESOURCES, DualState, dual_update
-from repro.core.policy import Knobs, fedavg_knobs, policy
+from repro.core.duals import DualState
+from repro.core.policy import Knobs, fedavg_knobs
 from repro.fl.device import DEFAULT_PROFILE, ClientInfo
 from repro.optim import adam, make_optimizer
 
@@ -39,6 +49,12 @@ class FederatedStrategy:
     override any subset of the three hooks."""
 
     name = "base"
+
+    def reset(self) -> None:
+        """Clear per-run control transients (controller state, knob
+        policy adaptations) — the engine calls this at the top of every
+        ``run()``. Dual multipliers are *not* transients: they persist
+        so ``init_duals`` warm continuation across runs keeps working."""
 
     def configure_round(self, rnd: int, clients: Sequence[ClientInfo]
                         ) -> List[Knobs]:
@@ -53,8 +69,10 @@ class FederatedStrategy:
 
     def update_state(self, usages: Sequence[Dict[str, float]],
                      clients: Sequence[ClientInfo]) -> Dict[str, Dict[str, float]]:
-        """Consume the round's per-client usage — under fleet dynamics
-        the engine passes only the clients that actually *reported*, so
+        """Consume the round's per-client constraint measurements
+        (dicts keyed by constraint name; the engine builds them from
+        each ``ClientReport`` via the strategy's constraint set) — under
+        fleet dynamics only clients that actually *reported* appear, so
         duals never move on work the server never saw. Returns the
         per-profile dual snapshot for logging ({} when the strategy
         keeps no duals; with no survivors the snapshot is unchanged)."""
@@ -66,7 +84,20 @@ class FederatedStrategy:
         ignore — the FleetDynamics ledger already carries their token
         budget; strategies may additionally adapt."""
 
+    def observe_round(self, plan, reports: Sequence, dynamics) -> None:
+        """Round telemetry hook, fired after constraint accounting:
+        the composition ``RoundPlan`` (with per-client arrival times),
+        the delivered reports, and the live ``FleetDynamics``. Default:
+        ignore; ``CAFLL`` forwards it to its knob policy so server-side
+        knobs (deadline widening) can react."""
+
     def duals_snapshot(self) -> Dict[str, Dict[str, float]]:
+        return {}
+
+    def constraint_reports(self) -> Dict[str, List[ConstraintReport]]:
+        """Per-profile ``ConstraintReport`` lists from the most recent
+        ``update_state`` ({} for dual-free strategies or before the
+        first update)."""
         return {}
 
 
@@ -91,41 +122,85 @@ class FedAvg(FederatedStrategy):
 class CAFLL(FederatedStrategy):
     """The paper's constraint-aware loop, generalized to heterogeneous
     fleets: one ``DualState`` per device profile, updated against that
-    profile's budgets with the mean usage of its sampled clients."""
+    profile's budgets with the mean usage of its sampled clients.
+
+    The constraint stack is pluggable (``repro.constraints``): the
+    default — paper proxies x ``DeadzoneSubgradient`` x
+    ``PaperKnobPolicy`` — is bit-for-bit the seed loop, while a
+    registered fifth constraint, an adaptive/PI controller, or a
+    deadline-aware knob policy drop in without touching the dual math.
+    """
 
     name = "cafl"
 
-    def __init__(self, fl: FLConfig, init_duals: Optional[DualState] = None):
+    def __init__(self, fl: FLConfig, init_duals: Optional[DualState] = None,
+                 constraints=None, controller=None, knob_policy=None):
         self.fl = fl
+        self.constraints = make_constraints(
+            constraints if constraints is not None else fl.constraints)
+        self.controller = make_controller(
+            controller if controller is not None else fl.dual_controller)
+        self.knob_policy = make_knob_policy(
+            knob_policy if knob_policy is not None else fl.knob_policy,
+            constraints=self.constraints)
         self.duals: Dict[str, DualState] = {}
+        self._last_reports: Dict[str, List[ConstraintReport]] = {}
         if init_duals is not None:
             self.duals[DEFAULT_PROFILE] = init_duals
 
+    def reset(self):
+        self.controller.reset()
+        self.knob_policy.reset()
+        self._last_reports = {}
+
     def duals_for(self, profile_name: str) -> DualState:
-        return self.duals.setdefault(profile_name, DualState())
+        return self.duals.setdefault(
+            profile_name, DualState(lam=self.constraints.init_lam()))
 
     def configure_round(self, rnd, clients):
         per_profile = {}
         for ci in clients:
             name = ci.profile.name
             if name not in per_profile:
-                per_profile[name] = policy(self.duals_for(name), self.fl)
+                per_profile[name] = self.knob_policy.knobs(
+                    self.duals_for(name), self.fl)
         return [per_profile[ci.profile.name] for ci in clients]
 
     def update_state(self, usages, clients):
         by_profile: Dict[str, list] = {}
         for u, ci in zip(usages, clients):
             by_profile.setdefault(ci.profile.name, []).append((u, ci.profile))
+        self._last_reports = {}
         for name, entries in by_profile.items():
             us = [u for u, _ in entries]
             profile = entries[0][1]
-            mean = {r: sum(u[r] for u in us) / len(us) for r in RESOURCES}
-            self.duals[name] = dual_update(self.duals_for(name), mean,
-                                           profile.budgets, self.fl.duals)
+            state = self.duals_for(name)
+            new_lam = dict(state.lam)
+            reports = []
+            for c in self.constraints:
+                mean = sum(u[c.name] for u in us) / len(us)
+                budget = c.budget_of(profile.budgets)
+                ratio = mean / budget
+                prev = state.lam.get(c.name, 0.0)
+                lam = self.controller.step(f"{name}:{c.name}", prev, ratio,
+                                           self.fl.duals)
+                new_lam[c.name] = lam
+                reports.append(ConstraintReport(
+                    name=c.name, profile=name, usage=mean, budget=budget,
+                    ratio=ratio, lam_prev=prev, lam=lam,
+                    violated=ratio > 1.0))
+            self.duals[name] = DualState(lam=new_lam)
+            self._last_reports[name] = reports
         return self.duals_snapshot()
+
+    def observe_round(self, plan, reports, dynamics):
+        self.knob_policy.observe(plan, reports, dynamics)
 
     def duals_snapshot(self):
         return {name: dict(st.lam) for name, st in self.duals.items()}
+
+    def constraint_reports(self):
+        return self._last_reports
 
 
 class ServerOpt(FederatedStrategy):
@@ -158,22 +233,41 @@ class ServerOpt(FederatedStrategy):
         updates, self._state = self.opt.update(g, self._state, g)
         return updates
 
+    def reset(self):
+        self.inner.reset()
+
     def update_state(self, usages, clients):
         return self.inner.update_state(usages, clients)
 
     def on_dropout(self, dropped):
         self.inner.on_dropout(dropped)
 
+    def observe_round(self, plan, reports, dynamics):
+        self.inner.observe_round(plan, reports, dynamics)
+
     def duals_snapshot(self):
         return self.inner.duals_snapshot()
 
+    def constraint_reports(self):
+        return self.inner.constraint_reports()
+
+    @property
+    def constraints(self):
+        """The inner strategy's constraint set (None for dual-free
+        bases) — the engine reads it to know what to measure."""
+        return getattr(self.inner, "constraints", None)
+
 
 def make_strategy(method: str, fl: FLConfig,
-                  init_duals: Optional[DualState] = None) -> FederatedStrategy:
+                  init_duals: Optional[DualState] = None,
+                  constraints=None, controller=None,
+                  knob_policy=None) -> FederatedStrategy:
     """Resolve a method string: "fedavg", "cafl", "fedavg_weighted",
     "fedadam", "fedavgm", or any base composed as "<base>+adam" /
     "<base>+momentum" (e.g. "cafl+adam"). ``fl.server_opt`` composes the
-    same wrapper onto a plain method name."""
+    same wrapper onto a plain method name; the constraint-stack kwargs
+    (specs or instances) override ``fl.constraints`` /
+    ``fl.dual_controller`` / ``fl.knob_policy`` for CAFLL bases."""
     name = method.lower()
     aliases = {"fedadam": "fedavg+adam", "fedavgm": "fedavg+momentum"}
     name = aliases.get(name, name)
@@ -183,7 +277,8 @@ def make_strategy(method: str, fl: FLConfig,
     elif base_name == "fedavg_weighted":
         base = FedAvg(fl, weighted=True)
     elif base_name == "cafl":
-        base = CAFLL(fl, init_duals=init_duals)
+        base = CAFLL(fl, init_duals=init_duals, constraints=constraints,
+                     controller=controller, knob_policy=knob_policy)
     else:
         raise ValueError(f"unknown federated method: {method!r}")
     server = server or fl.server_opt

@@ -1,0 +1,465 @@
+"""Tests for the first-class Constraint API (``repro.constraints``):
+
+- stream equivalence: ``DeadzoneSubgradient`` is bit-for-bit the seed's
+  ``dual_update``, and the explicitly-constructed default stack
+  (``paper_constraints`` x ``DeadzoneSubgradient`` x ``PaperKnobPolicy``)
+  reproduces the committed CAFLL golden trajectory,
+- the constraint registry (a fifth constraint drives its own dual
+  without touching ``core/duals.py``),
+- knob policies incl. ``DeadlineAwareKnobPolicy`` deadline control,
+- engine wiring: ``on_dual_update`` callback, ``RoundRecord.constraints``
+  per-constraint fields, and the ``fl.constraints`` / ``fl.dual_controller``
+  / ``fl.knob_policy`` config surface.
+
+The hypothesis property suite for the controller invariants lives in
+``tests/test_constraints_properties.py`` (skipped when hypothesis is
+not installed, like the compression properties).
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_fl_config
+from repro.configs.base import Budgets, DualConfig
+from repro.constraints import (
+    AdaptiveStep, Constraint, ConstraintSet, DeadlineAwareKnobPolicy,
+    DeadzoneSubgradient, PIController, PaperKnobPolicy, make_constraints,
+    make_controller, make_knob_policy, paper_constraints,
+    register_constraint,
+)
+from repro.core.duals import RESOURCES, DualState, dual_update
+from repro.core.policy import policy
+from repro.data import load_corpus
+from repro.fl import (
+    CAFLL, ClientInfo, DeadlineStragglers, DeviceProfile, FederatedEngine,
+    FleetDynamics, NoStragglers, RoundCallback, RoundPlan, UniformSampler,
+    make_strategy,
+)
+from repro.models import build
+
+CFG = DualConfig()          # eta=0.35, deadzone=0.05, lambda_max=10.0
+
+
+# ---------------------------------------------------------------------------
+# stream equivalence with the seed dual update
+# ---------------------------------------------------------------------------
+
+
+def test_deadzone_controller_is_dual_update_bit_for_bit(rng):
+    """Deterministic seeded-stream version of the hypothesis test in
+    test_constraints_properties.py (which needs hypothesis installed)."""
+    budgets = Budgets(energy=1.3, comm_mb=0.7, memory=0.9, temp=1.1)
+    bmap = {"energy": 1.3, "comm": 0.7, "memory": 0.9, "temp": 1.1}
+    ctrl = DeadzoneSubgradient()
+    state = DualState()
+    lam = {r: 0.0 for r in RESOURCES}
+    for _ in range(200):
+        usage = {r: float(u) for r, u in
+                 zip(RESOURCES, rng.uniform(0.0, 10.0, size=4))}
+        state = dual_update(state, usage, budgets, CFG)
+        lam = {r: ctrl.step(r, lam[r], usage[r] / bmap[r], CFG)
+               for r in RESOURCES}
+        assert lam == state.lam                  # exact float equality
+
+
+def test_paper_knob_policy_is_policy_bit_for_bit():
+    cset = paper_constraints()
+    fl = get_fl_config()
+    pol = PaperKnobPolicy(constraints=cset)
+    for lam in (0.0, 0.17, 0.5, 1.3, 4.0, 10.0):
+        duals = DualState(lam={"energy": lam, "comm": lam / 3,
+                               "memory": lam / 7, "temp": lam / 2})
+        assert pol.knobs(duals, fl) == policy(duals, fl)
+
+
+# ---------------------------------------------------------------------------
+# the registry / constraint set
+# ---------------------------------------------------------------------------
+
+
+def test_make_constraints_specs():
+    assert make_constraints().names == RESOURCES
+    assert make_constraints("paper").names == RESOURCES
+    five = make_constraints("paper+wire_mb")
+    assert five.names == RESOURCES + ("wire_mb",)
+    assert make_constraints(["energy", "comm"]).names == ("energy", "comm")
+    custom = Constraint("fuel", measure=lambda rep: 1.0,
+                        budget_of=lambda b: 2.0)
+    assert make_constraints(["paper", custom]).names == \
+        RESOURCES + ("fuel",)
+    assert make_constraints(custom).names == ("fuel",)
+    got = make_constraints(five)
+    assert got is five                           # passthrough
+    with pytest.raises(ValueError):
+        make_constraints("paper+unobtainium")
+    with pytest.raises(ValueError):
+        ConstraintSet(list(paper_constraints()) + [make_constraints(
+            "energy").constraints[0]])           # duplicate name
+    with pytest.raises(ValueError):
+        Constraint("x", measure=lambda r: 0.0, budget_of=lambda b: 1.0,
+                   knob_group="turbo")
+
+
+def test_grouped_lam_identity_on_paper_set():
+    cset = paper_constraints()
+    lam = {"energy": 0.3, "comm": 1.7, "memory": 0.0, "temp": 9.9}
+    assert cset.grouped_lam(lam) == lam
+    # a comm-grouped fifth constraint folds into the comm pressure;
+    # a group-less one is observational
+    five = make_constraints("paper+wire_mb+latency")
+    lam5 = dict(lam, wire_mb=0.5, latency=3.0)
+    grouped = five.grouped_lam(lam5)
+    assert grouped["comm"] == pytest.approx(lam["comm"] + 0.5)
+    assert set(grouped) == {"energy", "comm", "memory", "temp"}
+
+
+def test_fifth_constraint_drives_own_dual_without_touching_duals_py():
+    """Acceptance: a registered wire-MB constraint gets its own dual,
+    moved by the controller, with core.duals untouched (RESOURCES is
+    still the paper 4-tuple)."""
+    assert RESOURCES == ("energy", "comm", "memory", "temp")
+    fl = get_fl_config().replace(constraints="paper+wire_mb")
+    strat = CAFLL(fl)
+    prof = DeviceProfile("default", fl.budgets)
+    clients = [ClientInfo(0, prof, 10)]
+    # wire measurement blows the comm budget 5x; proxies stay in budget
+    ok = {"energy": fl.budgets.energy, "comm": fl.budgets.comm_mb,
+          "memory": fl.budgets.memory, "temp": fl.budgets.temp,
+          "wire_mb": 5.0 * fl.budgets.comm_mb}
+    snap = strat.update_state([ok], clients)
+    assert snap["default"]["wire_mb"] > 0.0
+    assert all(snap["default"][r] == 0.0 for r in RESOURCES)
+    reps = {r.name: r for r in strat.constraint_reports()["default"]}
+    assert reps["wire_mb"].violated and not reps["comm"].violated
+    # its comm-group dual engages compression once pressure builds
+    for _ in range(6):
+        strat.update_state([ok], clients)
+    kn = strat.configure_round(2, clients)[0]
+    assert kn.q > 0
+
+
+def test_register_constraint_custom():
+    register_constraint("half_energy", lambda: Constraint(
+        "half_energy", measure=lambda rep: rep.usage["energy"],
+        budget_of=lambda b: b.energy / 2, knob_group="energy"))
+    cset = make_constraints("paper+half_energy")
+    assert cset.budgets_dict(Budgets())["half_energy"] == \
+        pytest.approx(Budgets().energy / 2)
+
+
+def test_constraint_set_measure_and_ratios():
+    class Rep:
+        usage = {"energy": 2.0, "comm": 0.3, "memory": 0.1, "temp": 0.5}
+        wire_mb_actual = 1.2
+
+    cset = make_constraints("paper+wire_mb")
+    m = cset.measure(Rep())
+    assert m["energy"] == 2.0 and m["wire_mb"] == 1.2
+    b = Budgets(energy=1.0, comm_mb=0.6, memory=1.0, temp=1.0)
+    r = cset.ratios(m, b)
+    assert r["wire_mb"] == pytest.approx(2.0)
+    assert cset.zero_usage() == {n: 0.0 for n in cset.names}
+
+
+# ---------------------------------------------------------------------------
+# resolution helpers
+# ---------------------------------------------------------------------------
+
+
+def test_pi_controller_holds_warm_start():
+    """A warm-started dual (init_duals) must be held by the positional
+    PI law: the integral seeds from the incoming lambda, so in-band
+    ratios keep it stationary instead of snapping it to zero."""
+    ctrl = PIController()
+    lam = 5.0
+    for _ in range(4):
+        nxt = ctrl.step("k", lam, 1.0, CFG)       # in-band ratio
+        assert nxt == pytest.approx(5.0)
+        lam = nxt
+    # and sustained violation still builds from the warm level
+    assert ctrl.step("k", lam, 2.0, CFG) > 5.0
+
+
+def test_proxy_control_loop_helper():
+    from repro.constraints import (proxy_control_loop, rounds_to_band,
+                                   tail_worst_ratio)
+    fl = get_fl_config()
+    band = 1.0 + fl.duals.deadzone
+    hist = proxy_control_loop(fl, controller="deadzone", rounds=60)
+    assert len(hist) == 60
+    kn0, r0 = hist[0]
+    assert kn0.k == fl.k_base and r0["comm"] > 5.0   # FedAvg start point
+    hit_dz = rounds_to_band(hist, band)
+    hit_ad = rounds_to_band(proxy_control_loop(fl, controller="adaptive",
+                                               rounds=60), band)
+    assert hit_dz is not None and hit_ad is not None and hit_ad < hit_dz
+    assert tail_worst_ratio(hist) > 0.0
+    assert rounds_to_band(hist, 0.0) is None
+
+
+def test_make_controller_resolution():
+    assert isinstance(make_controller(), DeadzoneSubgradient)
+    assert isinstance(make_controller("adaptive"), AdaptiveStep)
+    pi = PIController()
+    assert make_controller(pi) is pi
+    with pytest.raises(ValueError):
+        make_controller("bang-bang")
+
+
+def test_make_knob_policy_resolution():
+    cset = paper_constraints()
+    pol = make_knob_policy("paper", constraints=cset)
+    assert isinstance(pol, PaperKnobPolicy) and pol.constraints is cset
+    da = make_knob_policy("deadline_aware", constraints=cset)
+    assert isinstance(da, DeadlineAwareKnobPolicy)
+    assert isinstance(da.base, PaperKnobPolicy)
+    inst = DeadlineAwareKnobPolicy()
+    assert make_knob_policy(inst) is inst
+    with pytest.raises(ValueError):
+        make_knob_policy("vibes")
+
+
+def test_instance_policy_gets_constraints_threaded():
+    """An instance-passed policy with an unspecified constraint fold
+    behaves like the equivalent string spec: the strategy's set is
+    threaded in (through wrappers), while an explicit fold is kept."""
+    five = make_constraints("paper+wire_mb")
+    inst = DeadlineAwareKnobPolicy()
+    assert make_knob_policy(inst, constraints=five) is inst
+    assert inst.base.constraints is five
+    # the wire_mb dual now folds into the comm group -> q engages
+    fl = get_fl_config()
+    duals = DualState(lam={**{r: 0.0 for r in RESOURCES}, "wire_mb": 2.0})
+    assert inst.knobs(duals, fl).q == 2
+    # explicit folds are not overwritten
+    four = paper_constraints()
+    explicit = PaperKnobPolicy(constraints=four)
+    make_knob_policy(explicit, constraints=five)
+    assert explicit.constraints is four
+    # the CAFLL constructor path threads the same way
+    strat = CAFLL(fl.replace(constraints="paper+wire_mb"),
+                  knob_policy=DeadlineAwareKnobPolicy())
+    assert strat.knob_policy.base.constraints is strat.constraints
+
+
+def test_strategy_reset_restores_deadline_and_transients():
+    """engine.run() resets control transients: a second run must not
+    inherit the previous run's widened deadline (or ratchet its base),
+    while duals keep their warm-continuation semantics."""
+    dyn = FleetDynamics(sampler=UniformSampler(2),
+                        stragglers=DeadlineStragglers(deadline=1.0))
+    pol = DeadlineAwareKnobPolicy()
+    fl = get_fl_config().replace(knob_policy=pol)
+    strat = CAFLL(fl)
+    assert strat.knob_policy is pol
+    pol.observe(_plan((0, 1), (), (3.0, 3.0)), [], dyn)
+    assert dyn.stragglers.deadline > 1.0
+    strat.reset()                         # what engine.run() calls
+    assert dyn.stragglers.deadline == 1.0
+    assert pol.scale == 1.0 and pol._base_deadline is None
+
+
+def test_make_strategy_threads_constraint_stack():
+    fl = get_fl_config().replace(dual_controller="pi",
+                                 constraints="paper+wire_mb")
+    strat = make_strategy("cafl", fl)
+    assert isinstance(strat.controller, PIController)
+    assert strat.constraints.names == RESOURCES + ("wire_mb",)
+    # explicit kwargs override the config
+    strat2 = make_strategy("cafl", fl, controller="adaptive")
+    assert isinstance(strat2.controller, AdaptiveStep)
+    # wrapped strategies expose the inner constraint set
+    wrapped = make_strategy("cafl+adam", fl)
+    assert wrapped.constraints.names == strat.constraints.names
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware knob policy (unit)
+# ---------------------------------------------------------------------------
+
+
+def _plan(sampled, survivors, times, rnd=1):
+    sampled = tuple(sampled)
+    survivors = tuple(survivors)
+    return RoundPlan(round=rnd, available=sampled, sampled=sampled,
+                     survivors=survivors,
+                     dropped=tuple(c for c in sampled
+                                   if c not in survivors),
+                     times=tuple(times))
+
+
+def test_deadline_aware_widens_on_starvation_and_relaxes():
+    dyn = FleetDynamics(sampler=UniformSampler(4),
+                        stragglers=DeadlineStragglers(deadline=1.0))
+    pol = DeadlineAwareKnobPolicy(min_report_frac=0.5, widen=1.3,
+                                  max_scale=4.0, relax=0.9, headroom=1.05)
+    # 1/4 reported < 0.5 target -> widen to the time the median client
+    # would have needed (quantile targeting), plus headroom
+    pol.observe(_plan((0, 1, 2, 3), (0,), (0.9, 1.8, 2.0, 2.2)), [], dyn)
+    assert dyn.stragglers.deadline == pytest.approx(1.8 * 1.05)
+    # full report with fast arrivals -> relax back toward the base
+    pol.observe(_plan((0, 1), (0, 1), (0.5, 0.6), rnd=2), [], dyn)
+    assert dyn.stragglers.deadline == pytest.approx(1.8 * 1.05 * 0.9)
+    # never relaxes below the original deadline
+    for rnd in range(3, 30):
+        pol.observe(_plan((0, 1), (0, 1), (0.5, 0.6), rnd=rnd), [], dyn)
+    assert dyn.stragglers.deadline == pytest.approx(1.0)
+    # ...and never below what the slowest reporter demonstrably needed
+    pol2 = DeadlineAwareKnobPolicy(relax=0.5, headroom=1.05)
+    dyn2 = FleetDynamics(sampler=UniformSampler(2),
+                         stragglers=DeadlineStragglers(deadline=1.0))
+    pol2.observe(_plan((0, 1), (), (3.0, 3.0)), [], dyn2)
+    widened = dyn2.stragglers.deadline
+    pol2.observe(_plan((0, 1), (0, 1), (3.0, 3.0), rnd=2), [], dyn2)
+    assert dyn2.stragglers.deadline == pytest.approx(min(widened, 3.0 * 1.05))
+
+
+def test_deadline_aware_caps_at_max_scale():
+    dyn = FleetDynamics(sampler=UniformSampler(2),
+                        stragglers=DeadlineStragglers(deadline=1.0))
+    pol = DeadlineAwareKnobPolicy(max_scale=2.0)
+    for rnd in range(1, 10):
+        pol.observe(_plan((0, 1), (), (50.0, 60.0), rnd=rnd), [], dyn)
+    assert dyn.stragglers.deadline == pytest.approx(2.0)
+
+
+def test_deadline_aware_noop_without_deadline_model():
+    dyn = FleetDynamics(sampler=UniformSampler(2), stragglers=NoStragglers())
+    pol = DeadlineAwareKnobPolicy()
+    pol.observe(_plan((0, 1), (), ()), [], dyn)      # must not raise
+    assert pol.scale == 1.0
+    # knobs pass through to the base policy
+    fl = get_fl_config()
+    assert pol.knobs(DualState(), fl) == policy(DualState(), fl)
+    pol.reset()
+    assert pol._base_deadline is None
+
+
+# ---------------------------------------------------------------------------
+# engine wiring (tiny runs)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    ds = load_corpus(target_bytes=60_000)
+    cfg = get_config("charlm-shakespeare").replace(
+        vocab_size=max(ds.vocab_size, 64), num_layers=3, d_model=48,
+        num_heads=4, num_kv_heads=4, head_dim=12, d_ff=96)
+    fl = get_fl_config().replace(
+        rounds=3, num_clients=4, clients_per_round=2, s_base=3, b_base=8,
+        seq_len=16, eval_batches=1, eval_batch_size=8)
+    fl = fl.replace(duals=dataclasses.replace(fl.duals, s_min=2, b_min=4))
+    return ds, cfg, fl
+
+
+@pytest.fixture(scope="module")
+def tiny_model(tiny_setup):
+    _, cfg, _ = tiny_setup
+    return build(cfg)
+
+
+def test_explicit_default_stack_matches_committed_golden(tiny_setup,
+                                                         tiny_model):
+    """Acceptance: the explicitly-constructed default stack reproduces
+    the pre-refactor CAFLL golden trajectory (duals and knobs exactly,
+    not just approximately) — the implicit stack is pinned by
+    test_golden_trajectories; this pins the *explicit* construction
+    path (instance passthrough included)."""
+    golden_path = os.path.join(os.path.dirname(__file__), "golden",
+                               "cafl.json")
+    with open(golden_path) as f:
+        want = json.load(f)
+    ds, cfg, fl = tiny_setup
+    strategy = CAFLL(fl, constraints=paper_constraints(),
+                     controller=DeadzoneSubgradient(),
+                     knob_policy=PaperKnobPolicy(paper_constraints()))
+    res = FederatedEngine(tiny_model, fl, ds, strategy=strategy).run()
+    assert len(res.history) == len(want["rounds"])
+    for got, w in zip(res.history, want["rounds"]):
+        assert got.knobs == w["knobs"]
+        assert got.participants == w["participants"]
+        for r, lam in w["duals"].items():
+            assert got.duals[r] == pytest.approx(lam, abs=1e-9)
+        for r, u in w["usage"].items():
+            assert got.usage[r] == pytest.approx(u, rel=1e-6)
+
+
+def test_engine_emits_dual_updates_and_constraint_records(tiny_setup,
+                                                          tiny_model):
+    ds, cfg, fl = tiny_setup
+    fl5 = fl.replace(constraints="paper+wire_mb", dual_controller="adaptive")
+
+    class Capture(RoundCallback):
+        def __init__(self):
+            self.calls = []
+
+        def on_dual_update(self, engine, rnd, reports):
+            self.calls.append((rnd, reports))
+
+    cap = Capture()
+    res = FederatedEngine(tiny_model, fl5, ds, strategy="cafl",
+                          callbacks=[cap]).run()
+    assert len(cap.calls) == fl5.rounds
+    names = RESOURCES + ("wire_mb",)
+    for rnd, reports in cap.calls:
+        assert set(reports) == {"default"}
+        per = {r.name: r for r in reports["default"]}
+        assert tuple(per) == names
+        for r in per.values():
+            assert r.ratio == pytest.approx(r.usage / r.budget)
+            assert r.violated == (r.ratio > 1.0)
+            assert 0.0 <= r.lam <= fl5.duals.lambda_max
+    for rec in res.history:
+        assert tuple(rec.constraints) == names
+        for n, slot in rec.constraints.items():
+            assert set(slot) == {"ratio", "lam", "violated"}
+            assert slot["lam"] == pytest.approx(rec.duals[n])
+        assert "wire_mb" in rec.usage and "wire_mb" in rec.ratios
+
+
+def test_engine_runs_pi_controller(tiny_setup, tiny_model):
+    ds, cfg, fl = tiny_setup
+    res = FederatedEngine(tiny_model, fl.replace(dual_controller="pi"),
+                          ds, strategy="cafl").run()
+    for rec in res.history:
+        for lam in rec.duals.values():
+            assert np.isfinite(lam) and 0.0 <= lam <= fl.duals.lambda_max
+
+
+def test_deadline_aware_policy_recovers_dual_updates(tiny_setup, tiny_model):
+    """Dual-aware deadline control end-to-end: with a deadline no
+    baseline round can meet (jitter 0, deadline < 1 round), the paper
+    stack starves — every client drops, no report arrives, duals stay
+    frozen at zero. The deadline-aware policy widens the deadline from
+    the observed arrival times and the dual update resumes."""
+    ds, cfg, fl = tiny_setup
+    fl_t = fl.replace(rounds=4)
+
+    def dyn():
+        # carry-over off so every client's wall clock is exactly its
+        # knob time (the debt boost would entangle this test with the
+        # async_fleet death-spiral scenario)
+        return FleetDynamics(
+            sampler=UniformSampler(fl_t.clients_per_round),
+            stragglers=DeadlineStragglers.for_config(fl_t, deadline=0.7,
+                                                     jitter=0.0),
+            carryover_tokens=False)
+
+    starved = FederatedEngine(tiny_model, fl_t, ds, strategy="cafl",
+                              dynamics=dyn()).run()
+    assert all(not r.participants for r in starved.history)
+    assert all(lam == 0.0 for r in starved.history
+               for lam in r.duals.values())
+
+    d = dyn()
+    recovered = FederatedEngine(
+        tiny_model, fl_t.replace(knob_policy="deadline_aware"), ds,
+        strategy="cafl", dynamics=d).run()
+    assert d.stragglers.deadline > 0.7            # the server widened it
+    assert any(r.participants for r in recovered.history)
+    assert any(lam > 0.0 for r in recovered.history
+               for lam in r.duals.values())

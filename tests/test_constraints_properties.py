@@ -1,0 +1,130 @@
+"""Hypothesis invariants every ``DualController`` must keep, over
+arbitrary violation-ratio trajectories:
+
+    dual feasibility        0 <= lambda <= lambda_max, always
+    dead-band no-chatter    in-band ratios never move a resting dual,
+                            and after any history the dual is
+                            stationary under consecutive in-band steps
+                            (at most one settling step)
+    monotone pressure       sustained violation -> non-decreasing
+                            lambda; sustained slack -> non-increasing
+
+plus the bit-for-bit stream equivalence of ``DeadzoneSubgradient``
+with the seed's ``dual_update`` under random usage streams.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs.base import Budgets, DualConfig  # noqa: E402
+from repro.constraints import (  # noqa: E402
+    AdaptiveStep, DeadzoneSubgradient, PIController,
+)
+from repro.core.duals import RESOURCES, DualState, dual_update  # noqa: E402
+
+CFG = DualConfig()          # eta=0.35, deadzone=0.05, lambda_max=10.0
+
+CONTROLLERS = {
+    "deadzone": DeadzoneSubgradient,
+    "adaptive": AdaptiveStep,
+    "pi": PIController,
+}
+
+ratio_seqs = st.lists(st.floats(min_value=0.0, max_value=8.0,
+                                allow_nan=False), min_size=1, max_size=40)
+
+
+def _trajectory(ctrl, ratios, cfg=CFG, key="k"):
+    lam, out = 0.0, []
+    for r in ratios:
+        lam = ctrl.step(key, lam, r, cfg)
+        out.append(lam)
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(CONTROLLERS))
+@given(ratios=ratio_seqs)
+@settings(max_examples=60, deadline=None)
+def test_controller_dual_feasibility_bounds(name, ratios):
+    """0 <= lambda <= lambda_max along any ratio trajectory."""
+    traj = _trajectory(CONTROLLERS[name](), ratios)
+    assert all(0.0 <= lam <= CFG.lambda_max for lam in traj)
+
+
+@pytest.mark.parametrize("name", sorted(CONTROLLERS))
+@given(ratios=st.lists(st.floats(min_value=1.0 - CFG.deadzone,
+                                 max_value=1.0 + CFG.deadzone),
+                       min_size=1, max_size=20))
+@settings(max_examples=40, deadline=None)
+def test_controller_no_chatter_from_rest(name, ratios):
+    """Inside the +-deadzone band a resting dual never moves."""
+    traj = _trajectory(CONTROLLERS[name](), ratios)
+    assert all(lam == 0.0 for lam in traj)
+
+
+@pytest.mark.parametrize("name", sorted(CONTROLLERS))
+@given(prefix=ratio_seqs,
+       inband=st.floats(min_value=1.0 - CFG.deadzone,
+                        max_value=1.0 + CFG.deadzone))
+@settings(max_examples=40, deadline=None)
+def test_controller_stationary_inside_band(name, prefix, inband):
+    """After any history, consecutive in-band ratios leave lambda
+    stationary (the dead-zone's no-chatter guarantee: at most one
+    settling step, then no further movement)."""
+    ctrl = CONTROLLERS[name]()
+    lam = _trajectory(ctrl, prefix)[-1]
+    settled = ctrl.step("k", lam, inband, CFG)
+    for _ in range(3):
+        nxt = ctrl.step("k", settled, inband, CFG)
+        assert nxt == settled
+        settled = nxt
+
+
+@pytest.mark.parametrize("name", sorted(CONTROLLERS))
+@given(ratio=st.floats(min_value=1.0 + CFG.deadzone + 1e-6, max_value=8.0),
+       steps=st.integers(min_value=2, max_value=30))
+@settings(max_examples=40, deadline=None)
+def test_controller_monotone_under_sustained_violation(name, ratio, steps):
+    """A persistently violated constraint builds non-decreasing
+    pressure, and strictly positive pressure immediately."""
+    traj = _trajectory(CONTROLLERS[name](), [ratio] * steps)
+    assert traj[0] > 0.0
+    assert all(b >= a for a, b in zip(traj, traj[1:]))
+
+
+@pytest.mark.parametrize("name", sorted(CONTROLLERS))
+@given(ratio=st.floats(min_value=0.0, max_value=1.0 - CFG.deadzone - 1e-6),
+       steps=st.integers(min_value=2, max_value=30))
+@settings(max_examples=40, deadline=None)
+def test_controller_decays_under_sustained_slack(name, ratio, steps):
+    """Sustained under-budget usage releases pressure monotonically
+    down to (and never below) zero."""
+    ctrl = CONTROLLERS[name]()
+    lam = 0.0
+    for _ in range(5):                            # build pressure first
+        lam = ctrl.step("k", lam, 3.0, CFG)
+    traj = []
+    for _ in range(steps):
+        lam = ctrl.step("k", lam, ratio, CFG)
+        traj.append(lam)
+    assert all(b <= a for a, b in zip(traj, traj[1:]))
+    assert all(lam >= 0.0 for lam in traj)
+
+
+@given(usages=st.lists(
+    st.tuples(*[st.floats(min_value=0.0, max_value=10.0)] * 4),
+    min_size=1, max_size=25))
+@settings(max_examples=60, deadline=None)
+def test_deadzone_controller_is_dual_update_bit_for_bit(usages):
+    budgets = Budgets(energy=1.3, comm_mb=0.7, memory=0.9, temp=1.1)
+    bmap = {"energy": 1.3, "comm": 0.7, "memory": 0.9, "temp": 1.1}
+    ctrl = DeadzoneSubgradient()
+    state = DualState()
+    lam = {r: 0.0 for r in RESOURCES}
+    for tup in usages:
+        usage = dict(zip(RESOURCES, tup))
+        state = dual_update(state, usage, budgets, CFG)
+        lam = {r: ctrl.step(r, lam[r], usage[r] / bmap[r], CFG)
+               for r in RESOURCES}
+        assert lam == state.lam                  # exact float equality
