@@ -5,10 +5,15 @@ stragglers) showing the engine-level round cost of partial
 participation vs the full static fleet, a sync-vs-FedBuff
 aggregator comparison under stragglers (rounds/sec and
 rounds-to-target-loss: the barrier discards deadline-missers, the
-buffered async path applies them late), and a dual-controller
-comparison (deadzone vs adaptive vs PI) on the calibrated proxy
-control loop: rounds until every constraint first enters its deadzone
-band, and the tail violation ratio each law settles at.
+buffered async path applies them late), a virtual wall-clock
+comparison (``time_mode="wall_clock"``: simulated *seconds* to a
+target loss for the wait-for-all barrier vs deadline-discard vs
+FedBuff — the axis rounds-to-target cannot rank, since the three
+policies' rounds cost different amounts of simulated time), and a
+dual-controller comparison (deadzone vs adaptive vs PI) on the
+calibrated proxy control loop: rounds until every constraint first
+enters its deadzone band, and the tail violation ratio each law
+settles at.
 
     PYTHONPATH=src:. python benchmarks/fl_engine_bench.py
 
@@ -72,6 +77,7 @@ def rows():
                 f"{timings['sequential'] / timings['batched']:.2f}x"))
     out += _dynamics_rows(model, fl, ds)
     out += _aggregator_rows(model, fl, ds)
+    out += _wall_clock_rows(model, fl, ds)
     out += _controller_rows()
     return out
 
@@ -154,6 +160,65 @@ def _aggregator_rows(model, fl, ds):
         out.append((f"fl.aggregator.{name}.rounds_to_target", 0.0,
                     f"target={target:.3f},"
                     f"{'hit@%d' % hit if hit else 'miss@%d' % fl_bench.rounds}"))
+    return out
+
+
+def _wall_clock_rows(model, fl, ds):
+    """The virtual wall clock's headline metric: *simulated seconds* to
+    a target loss under ``time_mode="wall_clock"``, for the three
+    server policies the async story compares — a wait-for-all barrier
+    (generous deadline: nothing lost, rounds cost the slow tier's full
+    compute time), the deadline-discard barrier (tight deadline: rounds
+    cost one deadline, stragglers' work is thrown away), and FedBuff
+    (tight deadline, rounds end at buffer-fill events, stragglers
+    deliver late at their simulated arrival time). Rounds-to-target
+    cannot rank these fairly — their rounds cost different amounts of
+    simulated time; seconds-to-target is the axis the paper's
+    latency/thermal story actually cares about."""
+    from repro.fl import (DeadlineStragglers, FedBuffAggregator,
+                          FederatedEngine, FleetClass, FleetDynamics,
+                          UniformSampler, make_fleet, seconds_to_target)
+
+    fl_bench = fl.replace(rounds=6, eval_batches=1, eval_batch_size=16,
+                          clients_per_round=4)
+    profiles, cp = make_fleet(fl_bench, [
+        FleetClass("fast", fraction=0.5),
+        FleetClass("slow", fraction=0.5, compute_scale=2.0)])
+
+    def dyn(deadline):
+        return FleetDynamics(
+            sampler=UniformSampler(fl_bench.clients_per_round),
+            stragglers=DeadlineStragglers.for_config(fl_bench,
+                                                     deadline=deadline,
+                                                     jitter=0.3))
+
+    scenarios = {
+        "sync": ("sync", 4.0),                 # wait-for-all barrier
+        "deadline_discard": ("sync", 1.1),     # tight barrier, discards
+        "fedbuff": (FedBuffAggregator(buffer_size=3), 1.1),
+    }
+    runs = {}
+    out = []
+    for name, (agg, deadline) in scenarios.items():
+        res = FederatedEngine(model, fl_bench, ds, strategy="fedavg",
+                              executor="batched", profiles=profiles,
+                              client_profiles=cp, dynamics=dyn(deadline),
+                              aggregator=agg).run(time_mode="wall_clock")
+        runs[name] = res
+        sim = res.history[-1].sim_time
+        out.append((f"fl.clock.{name}.sim_seconds_total", 0.0,
+                    f"{sim:.2f}du,{len(res.history)}rounds,"
+                    f"{sim / len(res.history):.2f}du/round"))
+    # seconds to the weakest policy's final loss (deadline units: 1.0 =
+    # one baseline round on calibration silicon); the start-of-round
+    # charge convention lives in repro.fl.clock.seconds_to_target
+    target = max(res.history[-1].val_loss for res in runs.values())
+    for name, res in runs.items():
+        hit = seconds_to_target(res, target)
+        out.append((f"fl.clock.{name}.seconds_to_target", 0.0,
+                    f"target={target:.3f},"
+                    + (f"hit@{hit:.2f}du" if hit is not None
+                       else f"miss@{res.history[-1].sim_time:.2f}du")))
     return out
 
 

@@ -211,9 +211,25 @@ class FLConfig:
     # "adaptive" (violation-scaled step) | "pi" | a DualController
     dual_controller: Any = "deadzone"
     # duals -> knobs mapping: "paper" (Eq. 5-7) | "deadline_aware"
-    # (widens the straggler deadline when drops starve the dual update)
+    # (widens the straggler deadline when drops starve the dual update,
+    # and tightens/widens it from the latency constraint's dual when
+    # one is registered)
     # | a KnobPolicy instance
     knob_policy: Any = "paper"
+    # per-constraint DualConfig overrides: {"latency": {"eta": 1.0}}
+    # runs the latency dual at its own learning rate / deadzone without
+    # touching the shared ``duals`` config the paper's four proxies use
+    # (None / {} = every constraint shares ``duals``)
+    dual_overrides: Any = None
+    # --- virtual wall clock (repro.fl.clock) ---
+    # "rounds": the engine advances in abstract rounds (seed semantics,
+    # golden-pinned bit-for-bit). "wall_clock": rounds begin when the
+    # previous barrier/buffer event completes, late async reports land
+    # at their simulated *arrival time*, and ``run(horizon_seconds=)``
+    # replaces a fixed round count.
+    time_mode: str = "rounds"
+    # simulated-seconds budget for wall-clock runs (None = round count)
+    horizon_seconds: Optional[float] = None
 
     def replace(self, **kw) -> "FLConfig":
         return dataclasses.replace(self, **kw)

@@ -23,7 +23,7 @@ from repro.constraints.constraint import (  # noqa: F401
 )
 from repro.constraints.controllers import (  # noqa: F401
     CONTROLLERS, AdaptiveStep, DeadzoneSubgradient, DualController,
-    PIController, make_controller,
+    PIController, dual_config_for, make_controller, resolve_dual_configs,
 )
 from repro.constraints.knobs import (  # noqa: F401
     KNOB_POLICIES, DeadlineAwareKnobPolicy, KnobPolicy, PaperKnobPolicy,

@@ -25,7 +25,8 @@ steady-state pressure.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Union
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Union
 
 from repro.configs.base import DualConfig
 from repro.core.duals import deadzone
@@ -33,6 +34,41 @@ from repro.core.duals import deadzone
 
 def _clip(lam: float, cfg: DualConfig) -> float:
     return float(min(max(lam, 0.0), cfg.lambda_max))
+
+
+def dual_config_for(base: DualConfig, overrides: Optional[Mapping[str, Any]],
+                    name: str) -> DualConfig:
+    """Resolve constraint ``name``'s effective DualConfig.
+
+    ``overrides`` is the ``fl.dual_overrides`` mapping: constraint name
+    -> either a full ``DualConfig`` or a dict of field overrides applied
+    on top of the shared ``base`` (e.g. ``{"latency": {"eta": 1.0}}``
+    runs the latency dual at a faster learning rate without touching
+    the eta the paper's four proxies share). Unknown-field overrides
+    raise, so typos cannot silently fall back to the shared config.
+    """
+    if not overrides or name not in overrides:
+        return base
+    ov = overrides[name]
+    if isinstance(ov, DualConfig):
+        return ov
+    return dataclasses.replace(base, **dict(ov))
+
+
+def resolve_dual_configs(base: DualConfig,
+                         overrides: Optional[Mapping[str, Any]],
+                         names) -> Dict[str, DualConfig]:
+    """Resolve every constraint's effective DualConfig at once, with
+    the unknown-name fail-fast both consumers (``CAFLL`` and the proxy
+    control loop) must agree on: an override keyed by a constraint not
+    in ``names`` raises instead of being silently dropped."""
+    names = tuple(names)
+    unknown = set(overrides or ()) - set(names)
+    if unknown:
+        raise ValueError(
+            f"fl.dual_overrides names unregistered constraints "
+            f"{sorted(unknown)}; this stack has {list(names)}")
+    return {n: dual_config_for(base, overrides, n) for n in names}
 
 
 class DualController:

@@ -10,7 +10,11 @@ delivered reports, and the live ``FleetDynamics`` — this is where
 straggler deadline when the dropped fraction starves the dual update
 (no reports -> no usage telemetry -> duals frozen at their last value
 while the fleet burns budget), using the per-client arrival times the
-engine has exposed since the aggregator redesign.
+engine has exposed since the aggregator redesign — and, when a
+``latency`` constraint is registered, *tightens* the deadline from
+that constraint's dual, closing the latency loop on the axis
+``time_mode="wall_clock"`` makes measurable (the deadline is the
+simulated cost of a straggler-bound round).
 """
 from __future__ import annotations
 
@@ -88,6 +92,27 @@ class DeadlineAwareKnobPolicy(KnobPolicy):
     arrival (plus headroom) needed, so relaxation cannot re-starve the
     very clients it just recovered. The training-knob mapping is
     delegated to ``base`` untouched.
+
+    **The latency-dual closed loop.** With a ``latency`` constraint
+    registered (``fl.constraints="paper+latency"``) the policy also
+    reads that constraint's multiplier — the Lagrangian pressure that
+    arrivals are running past the latency budget — and *tightens* the
+    deadline from it: each observe pulls the scale toward
+    ``latency_budget / base_deadline`` (the scale at which one round
+    costs exactly the budget) with strength ``min(1, latency_gain *
+    lam)``, bounded below by ``min_scale``. Tightening only engages
+    when the fleet is reporting adequately (``frac >=
+    min_report_frac``): starvation recovery keeps priority, so the two
+    arms cannot deadlock — the dual can only speed rounds up once there
+    are reports feeding it. When the pressure clears (lam back to 0) a
+    below-base scale drifts back toward 1.0 at the ``relax`` rate, so
+    a transient spike cannot ratchet the tightened deadline (and its
+    discarded work) forever. Under ``time_mode="wall_clock"`` the
+    deadline *is* the round's cost ceiling, closing the loop the
+    ROADMAP names: latency dual -> deadline -> simulated seconds ->
+    arrival ratios -> latency dual. Without a latency dual (the
+    default stacks) the multiplier is always 0 and behaviour is
+    unchanged.
     """
 
     name = "deadline_aware"
@@ -95,19 +120,29 @@ class DeadlineAwareKnobPolicy(KnobPolicy):
     def __init__(self, base: Optional[KnobPolicy] = None,
                  min_report_frac: float = 0.5, widen: float = 1.3,
                  max_scale: float = 4.0, relax: float = 0.9,
-                 headroom: float = 1.05):
+                 headroom: float = 1.05, latency_name: str = "latency",
+                 latency_gain: float = 0.5, latency_budget: float = 1.0,
+                 min_scale: float = 0.25):
         assert 0.0 < min_report_frac <= 1.0
         assert widen > 1.0 and max_scale >= 1.0 and 0.0 < relax <= 1.0
         assert headroom >= 1.0
+        assert latency_gain >= 0.0 and latency_budget > 0.0
+        assert 0.0 < min_scale <= 1.0
         self.base = base or PaperKnobPolicy()
         self.min_report_frac = min_report_frac
         self.widen = widen
         self.max_scale = max_scale
         self.relax = relax
         self.headroom = headroom
+        self.latency_name = latency_name
+        self.latency_gain = latency_gain
+        self.latency_budget = latency_budget
+        self.min_scale = min_scale
         self.scale = 1.0
         self._base_deadline: Optional[float] = None
         self._strag = None              # the straggler model we widened
+        self._latency_lam = 0.0         # worst latency dual seen this round
+        self._last_latency_lam = 0.0    # pressure the last observe applied
 
     def reset(self) -> None:
         self.base.reset()
@@ -119,14 +154,23 @@ class DeadlineAwareKnobPolicy(KnobPolicy):
         self.scale = 1.0
         self._base_deadline = None
         self._strag = None
+        self._latency_lam = 0.0
+        self._last_latency_lam = 0.0
 
     def knobs(self, duals, fl):
+        # the engine calls knobs() once per device profile before the
+        # round runs: remember the worst latency pressure across
+        # profiles for this round's observe()
+        self._latency_lam = max(self._latency_lam,
+                                duals.lam.get(self.latency_name, 0.0))
         return self.base.knobs(duals, fl)
 
     def _needed_scale(self, time: float) -> float:
         return time * self.headroom / self._base_deadline
 
     def observe(self, plan, reports, dynamics) -> None:
+        lam, self._latency_lam = self._latency_lam, 0.0
+        self._last_latency_lam = lam
         strag = getattr(dynamics, "stragglers", None)
         deadline = getattr(strag, "deadline", None)
         if deadline is None or not plan.sampled:
@@ -152,11 +196,31 @@ class DeadlineAwareKnobPolicy(KnobPolicy):
                         default=1.0)
             self.scale = min(self.scale,
                              max(1.0, self.scale * self.relax, floor))
+        if lam > 0.0 and frac >= self.min_report_frac:
+            # latency dual pressure: pull the deadline toward the scale
+            # at which one round costs the latency budget; dual ascent
+            # (not this policy) decides how hard to pull
+            target = max(self.min_scale,
+                         self.latency_budget / self._base_deadline)
+            w = min(1.0, self.latency_gain * lam)
+            pulled = (1.0 - w) * self.scale + w * target
+            self.scale = max(self.min_scale, min(self.scale, pulled))
+        elif lam <= 0.0 and self.scale < 1.0 and \
+                frac >= self.min_report_frac:
+            # pressure gone: drift back toward the base deadline at the
+            # relax rate — a transient latency spike must not ratchet
+            # the tightened deadline (and its discarded work) forever;
+            # if arrivals re-violate the budget the dual rises and
+            # tightens again, closing the loop in both directions
+            self.scale = min(1.0, self.scale / self.relax)
         strag.deadline = self._base_deadline * self.scale
 
     def state_snapshot(self):
         return {"name": self.name, "scale": self.scale,
                 "base_deadline": self._base_deadline,
+                # the pressure the most recent observe() actually
+                # applied (the accumulator is consumed each round)
+                "latency_lam": self._last_latency_lam,
                 "base_policy": self.base.state_snapshot()}
 
 

@@ -16,7 +16,8 @@ from typing import List, Optional, Tuple
 
 from repro.configs.base import FLConfig
 from repro.constraints.constraint import make_constraints
-from repro.constraints.controllers import make_controller
+from repro.constraints.controllers import (make_controller,
+                                           resolve_dual_configs)
 from repro.constraints.knobs import make_knob_policy
 from repro.core.duals import DualState
 from repro.core.policy import Knobs
@@ -37,6 +38,10 @@ def proxy_control_loop(fl: FLConfig, controller="deadzone",
     ctrl = make_controller(controller)
     pol = make_knob_policy(knob_policy, constraints=cset)
     res = calibrate(p_base, fl)
+    # per-constraint DualConfig overrides (fl.dual_overrides) apply in
+    # the proxy loop exactly as in CAFLL.update_state, unknown-name
+    # fail-fast included (one shared resolver, so they cannot diverge)
+    cfgs = resolve_dual_configs(fl.duals, fl.dual_overrides, cset.names)
     duals = DualState(lam=cset.init_lam())
     history = []
     for _ in range(rounds):
@@ -47,7 +52,7 @@ def proxy_control_loop(fl: FLConfig, controller="deadzone",
         ratios = cset.ratios(usage, fl.budgets)
         duals = DualState(lam={
             c.name: ctrl.step(c.name, duals.lam[c.name], ratios[c.name],
-                              fl.duals)
+                              cfgs[c.name])
             for c in cset})
         history.append((kn, ratios))
     return history

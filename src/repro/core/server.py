@@ -39,6 +39,14 @@ class RoundRecord:
     wire_mb_actual: float
     energy_true: float
     seconds: float
+    # --- virtual wall clock (repro.fl.clock) ---
+    # simulated clock at the end of this round (cumulative seconds in
+    # deadline units: 1.0 = one baseline round on calibration silicon)
+    # and this round's simulated duration. Populated in BOTH time
+    # modes — in time_mode="rounds" purely as accounting, so seconds-
+    # to-target is comparable across modes. 0.0 = pre-clock record.
+    sim_time: float = 0.0
+    round_seconds: float = 0.0
     # per-device-class breakdown; empty for a homogeneous fleet
     per_profile: Dict[str, Dict] = field(default_factory=dict)
     # --- fleet dynamics (repro.fl.dynamics) ---
@@ -114,9 +122,12 @@ def run_federated(model: Model, fl: FLConfig, dataset: CharDataset,
                   method: Optional[str] = None, rounds: Optional[int] = None,
                   resources: Optional[ResourceModel] = None,
                   init_params=None, init_duals: Optional[DualState] = None,
-                  log=print) -> FLResult:
+                  log=print, time_mode: Optional[str] = None,
+                  horizon_seconds: Optional[float] = None) -> FLResult:
     """Seed-compatible driver: builds a ``FederatedEngine`` with the
-    default homogeneous fleet and a logging callback, then runs it."""
+    default homogeneous fleet and a logging callback, then runs it.
+    ``time_mode`` / ``horizon_seconds`` pass through to the engine
+    (defaults come from ``fl.time_mode`` / ``fl.horizon_seconds``)."""
     from repro.fl.callbacks import LoggingCallback
     from repro.fl.engine import FederatedEngine
 
@@ -126,4 +137,5 @@ def run_federated(model: Model, fl: FLConfig, dataset: CharDataset,
         callbacks=[LoggingCallback(log)] if log else [],
         resources=resources,
         init_duals=init_duals)
-    return engine.run(rounds=rounds, init_params=init_params)
+    return engine.run(rounds=rounds, init_params=init_params,
+                      time_mode=time_mode, horizon_seconds=horizon_seconds)

@@ -31,6 +31,10 @@ from repro.fl.callbacks import (  # noqa: F401
     CheckpointCallback, HistoryWriterCallback, LoggingCallback,
     RoundCallback, TimingCallback,
 )
+from repro.fl.clock import (  # noqa: F401
+    TIME_MODES, EventQueue, KnobRoundTime, RoundTimeModel, SimClock,
+    TimedReport, make_round_time, seconds_to_target,
+)
 from repro.fl.device import (  # noqa: F401
     DEFAULT_PROFILE, ClientInfo, DeviceProfile, FleetClass, make_fleet,
     uniform_fleet,

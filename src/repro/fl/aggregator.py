@@ -171,10 +171,17 @@ class Aggregator:
     ``accepts_late = True`` tells the engine to *execute* deadline
     missers and deliver their reports in the round their simulated
     wall clock lands in, instead of discarding them.
+
+    ``applies_mid_round = True`` marks policies whose ``submit`` can
+    emit an update before the round barrier (FedBuff). Under
+    ``time_mode="wall_clock"`` such an update is the "buffer completes"
+    event that *ends* the round: the next round begins at its simulated
+    time, so buffered-async rounds are exactly as long as their fills.
     """
 
     name = "base"
     accepts_late = False
+    applies_mid_round = False
 
     def __init__(self):
         self._combine: Optional[Combine] = None
@@ -304,6 +311,7 @@ class FedBuffAggregator(Aggregator):
 
     name = "fedbuff"
     accepts_late = True
+    applies_mid_round = True
 
     def __init__(self, buffer_size: int = 4,
                  policy: Optional[StalenessPolicy] = None):

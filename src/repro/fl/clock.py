@@ -1,0 +1,254 @@
+"""Virtual wall clock: simulated time as a first-class engine axis.
+
+The paper's thermal/latency story (Sec. 3, Eq. 5-7) is about *time* —
+a round deadline is seconds of wall clock, a straggler draw is seconds
+of device compute, FedBuff's headline win over the deadline-discard
+barrier is fewer *seconds* to a loss target — but a round-count
+simulation can only measure any of it in abstract rounds. This module
+supplies the two pieces the engine threads through its loop to run in
+``time_mode="wall_clock"``:
+
+    SimClock        monotone virtual time, advanced on events (client
+                    finishes, barrier/buffer completions). Every
+                    advance is logged, so tests can assert no event is
+                    lost and time never runs backwards.
+    RoundTimeModel  how long a round takes on the server's clock:
+                    client compute times come from the straggler
+                    model's draws when it keeps a clock, else from the
+                    knobs via the same ``compute_scale * s*ga*b /
+                    work_unit`` law ``DeadlineStragglers`` uses
+                    (``KnobRoundTime``), plus a fixed per-round server
+                    cost (eval + aggregation).
+
+Timing rules the engine applies (see ``FederatedEngine.run``):
+
+    barrier rounds   last until every survivor reported, or until the
+                     deadline when someone missed it (the server waited
+                     in vain) — ``round_seconds`` = min(deadline, max
+                     survivor time) + server cost
+    buffered async   the round ends at the first mid-round server
+                     update (the "buffer completes" event); deliveries
+                     after it roll into the next round's inbox
+    late reports     land at ``round_start + draw`` — their actual
+                     simulated arrival — instead of the rounds-mode
+                     ``ceil(t/deadline) - 1`` round-delay quantization,
+                     so a report is never applied later (in seconds)
+                     than the round-quantized schedule implies
+
+``time_mode="rounds"`` keeps the seed semantics bit-for-bit (the golden
+trajectories pin it); the clock still runs there, purely as accounting,
+so ``RoundRecord.sim_time`` / ``round_seconds`` are comparable across
+modes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from repro.configs.base import FLConfig
+from repro.core.policy import Knobs
+from repro.fl.device import ClientInfo
+
+TIME_MODES = ("rounds", "wall_clock")
+
+
+class SimClock:
+    """Monotone virtual time, advanced on simulation events.
+
+    ``advance_to`` clamps backwards moves to the current time (time
+    never reverses; an event that "happened" earlier than now is simply
+    processed now), and every call is recorded in ``events`` as
+    ``(label, requested_time, clock_after)`` so invariants — monotone
+    readings, no event loss — are checkable from the log alone. The
+    log keeps at most ``max_events`` entries (oldest half dropped when
+    full; ``event_count`` keeps the true total) so a 100k-round horizon
+    run cannot accumulate unbounded telemetry.
+    """
+
+    def __init__(self, start: float = 0.0, max_events: int = 100_000):
+        assert start >= 0.0 and max_events >= 2
+        self._now = float(start)
+        self.max_events = max_events
+        self.event_count = 0
+        self.events: List[Tuple[str, float, float]] = []
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def advance_to(self, t: float, label: str = "") -> float:
+        """Move the clock to ``t`` (no-op if ``t`` is in the past) and
+        return the new reading."""
+        self._now = max(self._now, float(t))
+        if len(self.events) >= self.max_events:
+            del self.events[:self.max_events // 2]
+        self.events.append((label, float(t), self._now))
+        self.event_count += 1
+        return self._now
+
+    def advance(self, dt: float, label: str = "") -> float:
+        assert dt >= 0.0, f"negative clock step {dt!r}"
+        return self.advance_to(self._now + dt, label)
+
+    def __repr__(self) -> str:
+        return f"SimClock(now={self._now:.4f}, events={len(self.events)})"
+
+
+class RoundTimeModel:
+    """Server-side round duration from the round's composition.
+
+        client_seconds(ci, kn)  one client's simulated compute time
+        round_seconds(...)      the barrier's duration for one round
+
+    The engine consults the model wherever the straggler model kept no
+    wall clock (``NoStragglers`` draws no times), so every scenario —
+    not just deadline ones — has a defined round length.
+    """
+
+    name = "base"
+
+    def client_seconds(self, ci: ClientInfo, kn: Knobs) -> float:
+        raise NotImplementedError
+
+    def round_seconds(self, sampled: Sequence[ClientInfo],
+                      knobs: Sequence[Knobs], times: Sequence[float],
+                      survivor_idx: Sequence[int],
+                      deadline: Optional[float]) -> float:
+        raise NotImplementedError
+
+
+@dataclass
+class KnobRoundTime(RoundTimeModel):
+    """The default model, on the same scale as ``DeadlineStragglers``:
+    time 1.0 is one baseline round (``work_unit = s_base * b_base``
+    sequences) on calibration silicon, so deadlines, straggler draws
+    and round durations all share one unit.
+
+    ``server_seconds`` is the fixed per-round server cost (eval, dual
+    update, aggregation) added to every round. ``idle_seconds`` is the
+    duration of a round nobody could join (no cohort, no deadline to
+    wait out) — it must be positive or a ``horizon_seconds`` run over a
+    dead fleet would never terminate.
+    """
+
+    name = "knob"
+
+    work_unit: float = 1.0
+    server_seconds: float = 0.0
+    idle_seconds: float = 1.0
+
+    def __post_init__(self):
+        assert self.work_unit > 0 and self.server_seconds >= 0.0
+        assert self.idle_seconds > 0.0
+
+    @classmethod
+    def for_config(cls, fl: FLConfig, **kw) -> "KnobRoundTime":
+        return cls(work_unit=float(fl.s_base * fl.b_base), **kw)
+
+    def client_seconds(self, ci, kn):
+        return float(ci.profile.compute_scale
+                     * (kn.s * kn.grad_accum * kn.b) / self.work_unit)
+
+    def round_seconds(self, sampled, knobs, times, survivor_idx, deadline):
+        if times:
+            if len(survivor_idx) < len(times) and deadline is not None:
+                # someone missed: the barrier waited out the deadline
+                dur = float(deadline)
+            else:
+                dur = max((times[i] for i in survivor_idx),
+                          default=float(deadline or 0.0))
+        elif sampled:
+            dur = max(self.client_seconds(ci, kn)
+                      for ci, kn in zip(sampled, knobs))
+        else:
+            dur = float(deadline) if deadline else self.idle_seconds
+        if dur <= 0.0:
+            dur = self.idle_seconds
+        return dur + self.server_seconds
+
+
+@dataclass(frozen=True)
+class TimedReport:
+    """One in-flight client report on the wall-clock event queue.
+    ``seq`` is the stamping order: simultaneous arrivals resolve to it,
+    so a homogeneous cohort (identical finish times) delivers in cohort
+    order — exactly the rounds-mode inbox order, which keeps the
+    no-straggler wall-clock stream bit-identical to ``"rounds"``."""
+    arrival: float                # absolute simulated arrival time
+    report: object                # the ClientReport to deliver
+    seq: int = 0                  # tie-break: stamping order
+
+    def sort_key(self):
+        return (self.arrival, self.seq)
+
+
+@dataclass
+class EventQueue:
+    """Arrival-time-ordered pending reports for the wall-clock loop.
+    Pure container semantics (push never drops, pop_until returns every
+    event at or before the cutoff, exactly once) — property-tested."""
+
+    _items: List[TimedReport] = field(default_factory=list)
+    _seq: int = 0
+
+    def stamp(self, arrival: float, report) -> TimedReport:
+        """Mint an ordered event without queueing it (the engine stamps
+        the current round's own finishes this way so they interleave
+        deterministically with queued late arrivals)."""
+        ev = TimedReport(float(arrival), report, self._seq)
+        self._seq += 1
+        return ev
+
+    def push(self, arrival: float, report) -> None:
+        self._items.append(self.stamp(arrival, report))
+
+    def push_event(self, ev: TimedReport) -> None:
+        self._items.append(ev)
+
+    def pop_until(self, cutoff: float) -> List[TimedReport]:
+        due = sorted((e for e in self._items if e.arrival <= cutoff),
+                     key=TimedReport.sort_key)
+        self._items = [e for e in self._items if e.arrival > cutoff]
+        return due
+
+    def drain(self) -> List[TimedReport]:
+        out = sorted(self._items, key=TimedReport.sort_key)
+        self._items = []
+        return out
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+
+def seconds_to_target(result, target: float) -> Optional[float]:
+    """First simulated time at which a run's val loss reached
+    ``target``, or None if it never did.
+
+    The timing convention this encodes: a ``RoundRecord``'s
+    ``val_loss`` is measured at round START (it is the loss the
+    *previous* round's updates achieved), so a hit charges the round's
+    start time ``sim_time - round_seconds`` — except the final record,
+    whose loss is re-evaluated after the run's last update and so
+    charges the full clock. Shared by ``benchmarks/fl_engine_bench``
+    and ``examples/async_fleet`` so the two can never diverge on it.
+    """
+    history = result.history
+    if not history:
+        return None
+    for r in history[:-1]:
+        if r.val_loss <= target:
+            return r.sim_time - r.round_seconds
+    last = history[-1]
+    return last.sim_time if last.val_loss <= target else None
+
+
+def make_round_time(spec, fl: FLConfig) -> RoundTimeModel:
+    """Resolve a round-time spec: an instance passes through; None /
+    "knob" builds the default ``KnobRoundTime`` on the config's
+    baseline work unit."""
+    if isinstance(spec, RoundTimeModel):
+        return spec
+    if spec is None or spec == "knob":
+        return KnobRoundTime.for_config(fl)
+    raise ValueError(f"unknown round-time model {spec!r}; "
+                     f"options: knob, or a RoundTimeModel instance")

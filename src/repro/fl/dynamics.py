@@ -245,9 +245,15 @@ class StragglerModel:
     """Decides which sampled clients report before the round deadline.
     ``split`` returns (survivor_idx, dropped_idx, times) as positions
     into the sampled cohort; ``times`` are the simulated wall-clock
-    draws (empty when the model keeps none)."""
+    draws (empty when the model keeps none).
+
+    ``deadline`` is the model's wall-clock round deadline in baseline-
+    round units, or None when it keeps no clock — the engine's
+    wall-clock mode and the deadline-aware knob policy both read (and
+    the policy writes) it through this attribute."""
 
     name = "base"
+    deadline: Optional[float] = None
 
     def split(self, rnd: int, sampled: Sequence[ClientInfo],
               knobs: Sequence[Knobs], rng: np.random.Generator

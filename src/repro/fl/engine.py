@@ -37,6 +37,25 @@ engine drains any partial async buffer (``Aggregator.finalize``).
 Only truly lost clients (no arrival time, a barrier aggregator, or a
 delivery past the run horizon) feed the dropout ledger.
 
+The engine runs in one of two *time modes* (``repro.fl.clock``):
+
+    time_mode="rounds"      the seed semantics — the loop advances in
+                            abstract rounds, late reports deliver a
+                            ``ceil(t/deadline) - 1`` round delay after
+                            their training round. Bit-for-bit identical
+                            to the pre-clock engine (golden-pinned).
+    time_mode="wall_clock"  a ``SimClock`` advances on events: a round
+                            begins when the previous barrier/buffer
+                            event completes, barrier rounds last until
+                            their survivors finished (or the deadline,
+                            when someone missed it), a buffered-async
+                            round ends at its first mid-round server
+                            update, and late reports land at their
+                            simulated *arrival time* instead of a round
+                            delay. ``run(horizon_seconds=...)`` replaces
+                            the fixed round count with a simulated-
+                            seconds budget.
+
 ``repro.core.server.run_federated`` is a thin wrapper over this class
 that preserves the seed API exactly.
 """
@@ -60,6 +79,8 @@ from repro.data.shakespeare import CharDataset
 from repro.fl.aggregator import (Aggregator, ClientReport, ServerUpdate,
                                  make_aggregator)
 from repro.fl.callbacks import RoundCallback
+from repro.fl.clock import (TIME_MODES, EventQueue, RoundTimeModel, SimClock,
+                            make_round_time)
 from repro.fl.device import (DEFAULT_PROFILE, ClientInfo, DeviceProfile,
                              uniform_fleet)
 from repro.fl.dynamics import FleetDynamics, RoundPlan
@@ -80,7 +101,8 @@ class FederatedEngine:
                  aggregator: Union[str, Aggregator, None] = None,
                  callbacks: Sequence[RoundCallback] = (),
                  resources: Optional[ResourceModel] = None,
-                 init_duals: Optional[DualState] = None):
+                 init_duals: Optional[DualState] = None,
+                 round_time: Union[str, RoundTimeModel, None] = None):
         self.model = model
         self.fl = fl
         self.dataset = dataset
@@ -100,11 +122,14 @@ class FederatedEngine:
         self.aggregator = make_aggregator(aggregator or fl.aggregator, fl)
         self.callbacks = list(callbacks)
         self._base_resources = resources
+        self.round_time = make_round_time(round_time, fl)
 
         self.data = FederatedData(dataset.train, fl.num_clients, seed=fl.seed,
                                   noniid_alpha=fl.noniid_alpha)
         self.params = None            # live during run(); callbacks read it
         self.profiles: Dict[str, DeviceProfile] = {}
+        self.time_mode = fl.time_mode  # resolved per run()
+        self.clock: Optional[SimClock] = None
 
     # ------------------------------------------------------------------
     def _setup(self, init_params):
@@ -152,9 +177,53 @@ class FederatedEngine:
                             usage=usage, energy_true=energy)
 
     # ------------------------------------------------------------------
-    def run(self, rounds: Optional[int] = None, init_params=None) -> FLResult:
+    def run(self, rounds: Optional[int] = None, init_params=None,
+            time_mode: Optional[str] = None,
+            horizon_seconds: Optional[float] = None) -> FLResult:
+        """Run the federated loop.
+
+        ``time_mode`` overrides ``fl.time_mode`` ("rounds" default;
+        "wall_clock" advances a ``SimClock`` on events). A
+        ``horizon_seconds`` budget (argument or ``fl.horizon_seconds``)
+        implies wall-clock mode and replaces the fixed round count: the
+        loop runs until the clock passes the horizon, and late reports
+        that could only land beyond it are lost, exactly like rounds
+        past ``rounds`` in the seed semantics. Explicit arguments beat
+        the config: ``run(time_mode="rounds")`` stays in rounds mode
+        even when ``fl.horizon_seconds`` is set (the config horizon is
+        ignored), while combining an explicit horizon *argument* with
+        an explicit non-wall-clock mode is a contradiction and raises.
+        """
         fl = self.fl
+        if time_mode is None:
+            # no explicit mode: the config decides, and a horizon
+            # (argument or config) implies wall clock
+            if horizon_seconds is None:
+                horizon_seconds = fl.horizon_seconds
+            time_mode = ("wall_clock" if horizon_seconds is not None
+                         else fl.time_mode)
+        else:
+            # explicit mode wins over the config horizon
+            if horizon_seconds is None and time_mode == "wall_clock":
+                horizon_seconds = fl.horizon_seconds
+            if horizon_seconds is not None and time_mode != "wall_clock":
+                raise ValueError(
+                    f"horizon_seconds requires time_mode='wall_clock', "
+                    f"got {time_mode!r}")
+        if time_mode not in TIME_MODES:
+            raise ValueError(f"unknown time_mode {time_mode!r}; "
+                             f"options: {', '.join(TIME_MODES)}")
+        wall = time_mode == "wall_clock"
+        self.time_mode = time_mode
+        explicit_rounds = rounds is not None
         rounds = rounds or fl.rounds
+        # a horizon run is bounded by simulated seconds, not the round
+        # count — unless the caller ALSO passed an explicit round count,
+        # which stays a hard cap (arguments beat the config here too).
+        # The backstop only stops a zero-length-round bug from spinning
+        # forever (round durations are validated positive below).
+        max_rounds = (rounds if horizon_seconds is None or explicit_rounds
+                      else 100_000)
         rng = np.random.default_rng(fl.seed)
         params, runner, executor = self._setup(init_params)
         evaluate = make_eval_fn(self.model, self.dataset, fl)
@@ -171,32 +240,55 @@ class FederatedEngine:
         agg = self.aggregator
         agg.reset(self.strategy.aggregate)
         fleet = [self._client_info(c) for c in range(fl.num_clients)]
-        # in-flight late reports: delivery round -> reports, plus the
-        # busy set (client_id -> delivery round): a straggler is still
-        # *training* until its wall clock ends, so it cannot be offered
-        # to the sampler again before its report lands — otherwise a 2x
-        # slow device would contribute 2x concurrent client-rounds
+        clock = self.clock = SimClock()
+        rtm = self.round_time
+        server_cost = getattr(rtm, "server_seconds", 0.0)
+        # in-flight late reports. rounds mode: delivery round -> reports,
+        # plus the busy map (client_id -> delivery round). wall-clock
+        # mode: an arrival-time event queue plus the busy set (freed the
+        # moment the report is delivered). Either way a straggler is
+        # still *training* until its wall clock ends, so it cannot be
+        # offered to the sampler again before its report lands —
+        # otherwise a 2x slow device would contribute 2x concurrent
+        # client-rounds
         pending: Dict[int, List[ClientReport]] = {}
         busy_until: Dict[int, int] = {}
+        pending_q = EventQueue()
+        busy: set = set()
 
         self.params = params
         self._emit("on_train_start")
-        for t in range(1, rounds + 1):
+        t = 0
+        while t < max_rounds:
+            if wall and horizon_seconds is not None and result.history \
+                    and clock.now >= horizon_seconds:
+                break
+            t += 1
             t0 = time.time()
+            round_start = clock.now
             self._emit("on_round_start", t)
             val_loss = evaluate(params)
 
             # --- round composition: gate, sample, deadline -------------
-            for cid in [c for c, due in busy_until.items() if due < t]:
-                del busy_until[cid]
-            roster = ([ci for ci in fleet if ci.client_id not in busy_until]
-                      if busy_until else fleet)
+            if wall:
+                roster = ([ci for ci in fleet if ci.client_id not in busy]
+                          if busy else fleet)
+            else:
+                for cid in [c for c, due in busy_until.items() if due < t]:
+                    del busy_until[cid]
+                roster = ([ci for ci in fleet
+                           if ci.client_id not in busy_until]
+                          if busy_until else fleet)
             avail, clients = dynamics.compose(
                 t, roster, rng, self.strategy.duals_snapshot())
             base_knobs = self.strategy.configure_round(t, clients)
             knobs = dynamics.adjust_knobs(clients, base_knobs)
             surv_idx, drop_idx, times = dynamics.finish(t, clients, knobs,
                                                         rng)
+            # the deadline in force DURING this round (a deadline-aware
+            # knob policy may widen it in observe_round, which must only
+            # affect the next round's duration)
+            deadline = getattr(dynamics.stragglers, "deadline", None)
             # deadline-missers split into late (report still arrives,
             # if the aggregator takes it and the run is still going at
             # delivery time) vs lost (discarded for good: no arrival
@@ -205,14 +297,28 @@ class FederatedEngine:
             late_idx: List[int] = []
             lost_idx: List[int] = []
             due_round: Dict[int, int] = {}
-            for i in drop_idx:
-                delay = (dynamics.stragglers.late_rounds(times[i])
-                         if agg.accepts_late and times else None)
-                if delay is not None and t + delay <= rounds:
-                    late_idx.append(i)
-                    due_round[i] = t + delay
-                else:
-                    lost_idx.append(i)
+            if wall:
+                # a late report lands at its absolute arrival time; it
+                # is lost only when that time is past the horizon (with
+                # a round-count budget the end time is unknown, so the
+                # report stays in flight and undelivered leftovers are
+                # counted lost at run end)
+                for i in drop_idx:
+                    if agg.accepts_late and times and (
+                            horizon_seconds is None
+                            or round_start + times[i] <= horizon_seconds):
+                        late_idx.append(i)
+                    else:
+                        lost_idx.append(i)
+            else:
+                for i in drop_idx:
+                    delay = (dynamics.stragglers.late_rounds(times[i])
+                             if agg.accepts_late and times else None)
+                    if delay is not None and t + delay <= rounds:
+                        late_idx.append(i)
+                        due_round[i] = t + delay
+                    else:
+                        lost_idx.append(i)
             survivors = [clients[i] for i in surv_idx]
             plan = RoundPlan(
                 round=t,
@@ -237,15 +343,28 @@ class FederatedEngine:
                 i: self._report(clients[i], knobs[i], base_knobs[i], o, t,
                                 times[i] if times else 0.0)
                 for i, o in zip(exec_idx, outs)}
-            for i in late_idx:
-                pending.setdefault(due_round[i], []).append(reports[i])
-                busy_until[clients[i].client_id] = due_round[i]
+            if not wall:
+                for i in late_idx:
+                    pending.setdefault(due_round[i], []).append(reports[i])
+                    busy_until[clients[i].client_id] = due_round[i]
 
             # --- deliver reports; the aggregator decides when they
             # become server updates ------------------------------------
-            arrived = sorted(pending.pop(t, ()),
-                             key=lambda r: (r.round_trained, r.arrival_time))
-            inbox = arrived + [reports[i] for i in surv_idx]
+            # the barrier's duration: min(deadline, slowest survivor)
+            # under a straggler clock, the knob-derived cohort time
+            # otherwise (see RoundTimeModel)
+            base_dur = rtm.round_seconds(clients, knobs, times, surv_idx,
+                                         deadline)
+            if wall and base_dur <= 0.0:
+                # a custom model returning non-positive durations would
+                # spin the horizon loop into the round backstop and
+                # return a normal-looking result well short of the
+                # horizon — fail loudly instead (KnobRoundTime enforces
+                # this itself via its idle floor)
+                raise ValueError(
+                    f"{type(rtm).__name__}.round_seconds returned "
+                    f"{base_dur!r}; wall-clock rounds need positive "
+                    f"durations")
             applied: List[ServerUpdate] = []
 
             def _apply(update, params):
@@ -255,15 +374,76 @@ class FederatedEngine:
                 self._emit("on_server_update", update)
                 return params
 
-            for rep in inbox:
-                rep.round_submitted = t
-                rep.staleness = t - rep.round_trained
-                update = agg.submit(rep)
+            if wall:
+                round_end_cap = round_start + base_dur
+                # earlier rounds' in-flight reports landing inside this
+                # round's window — popped BEFORE this round's missers
+                # join the queue, so a deadline-misser can never be
+                # delivered in its own round (e.g. through the server-
+                # cost tail of the cap); like rounds mode, a miss is
+                # always at least one round late
+                due = pending_q.pop_until(round_end_cap)
+                for i in late_idx:
+                    pending_q.push(round_start + times[i], reports[i])
+                    busy.add(clients[i].client_id)
+                events = [pending_q.stamp(
+                    round_start + (times[i] if times
+                                   else rtm.client_seconds(clients[i],
+                                                           knobs[i])),
+                    reports[i]) for i in surv_idx]
+                events = sorted(events + due, key=lambda e: e.sort_key())
+                arrived = []
+                inbox: List[ClientReport] = []
+                round_end = round_end_cap
+                cut = None
+                for k, ev in enumerate(events):
+                    rep = ev.report
+                    clock.advance_to(ev.arrival,
+                                     f"deliver:c{rep.client.client_id}")
+                    if rep.round_trained < t:
+                        arrived.append(rep)
+                    busy.discard(rep.client.client_id)
+                    rep.round_submitted = t
+                    rep.staleness = t - rep.round_trained
+                    inbox.append(rep)
+                    update = agg.submit(rep)
+                    if update is not None:
+                        params = _apply(update, params)
+                        if agg.applies_mid_round:
+                            # the buffer event completes this round:
+                            # deliveries after it belong to the next
+                            # round's inbox (their owners stay busy)
+                            round_end = ev.arrival + server_cost
+                            cut = k + 1
+                            break
+                if cut is not None:
+                    for ev in events[cut:]:
+                        pending_q.push_event(ev)
+                        busy.add(ev.report.client.client_id)
+                else:
+                    update = agg.flush(t)
+                    if update is not None:
+                        params = _apply(update, params)
+                clock.advance_to(round_end, f"round_end:{t}")
+            else:
+                arrived = sorted(pending.pop(t, ()),
+                                 key=lambda r: (r.round_trained,
+                                                r.arrival_time))
+                inbox = arrived + [reports[i] for i in surv_idx]
+                for rep in inbox:
+                    rep.round_submitted = t
+                    rep.staleness = t - rep.round_trained
+                    update = agg.submit(rep)
+                    if update is not None:
+                        params = _apply(update, params)
+                update = agg.flush(t)
                 if update is not None:
                     params = _apply(update, params)
-            update = agg.flush(t)
-            if update is not None:
-                params = _apply(update, params)
+                # pure accounting in rounds mode: the clock advances by
+                # the same barrier duration wall-clock mode would bill,
+                # so sim_time / round_seconds stay comparable across
+                # modes without touching the seed loop semantics
+                clock.advance_to(round_start + base_dur, f"round_end:{t}")
             dynamics.settle(clients, base_knobs, knobs,
                             list(surv_idx) + late_idx, lost_idx)
 
@@ -307,6 +487,8 @@ class FederatedEngine:
                 wire_mb_actual=wire_mb,
                 energy_true=energy,
                 seconds=time.time() - t0,
+                sim_time=clock.now,
+                round_seconds=clock.now - round_start,
                 per_profile=_per_profile_record(
                     [rep.client for rep in inbox],
                     [rep.policy_knobs for rep in inbox], usages,
@@ -327,7 +509,7 @@ class FederatedEngine:
         # drain whatever the policy still buffers (e.g. FedBuff's
         # partial buffer): those clients were executed, accounted and
         # debt-settled, so their work must reach the final params
-        update = agg.finalize(rounds)
+        update = agg.finalize(t)
         if update is not None:
             params = aggregation.apply_delta(params, update.delta)
             self.params = params
@@ -335,6 +517,18 @@ class FederatedEngine:
             last = result.history[-1]
             last.updates_applied += 1
             last.reports_applied += len(update.reports)
+        if wall and len(pending_q):
+            # in-flight reports whose arrival never fell inside a round:
+            # the run ended first. The work was executed and accounted,
+            # but — like rounds-mode losses past the horizon — it never
+            # reaches the model; the final record owns the loss.
+            leftovers = pending_q.drain()
+            if result.history:
+                last = result.history[-1]
+                last.dropped = (list(last.dropped)
+                                + [ev.report.client.client_id
+                                   for ev in leftovers])
+            self.strategy.on_dropout([ev.report.client for ev in leftovers])
 
         result.final_params = params
         result.history[-1].val_loss = evaluate(params)

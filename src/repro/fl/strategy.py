@@ -36,7 +36,8 @@ import jax
 
 from repro.configs.base import FLConfig
 from repro.constraints import (ConstraintReport, make_constraints,
-                               make_controller, make_knob_policy)
+                               make_controller, make_knob_policy,
+                               resolve_dual_configs)
 from repro.core import aggregation
 from repro.core.duals import DualState
 from repro.core.policy import Knobs, fedavg_knobs
@@ -143,6 +144,12 @@ class CAFLL(FederatedStrategy):
         self.knob_policy = make_knob_policy(
             knob_policy if knob_policy is not None else fl.knob_policy,
             constraints=self.constraints)
+        # per-constraint dual configs: fl.dual_overrides lets one
+        # constraint (say the latency dual) run a faster eta / tighter
+        # deadzone without destabilizing the shared paper config.
+        # Resolved once — typos in override names fail fast here.
+        self._dual_cfgs = resolve_dual_configs(fl.duals, fl.dual_overrides,
+                                               self.constraints.names)
         self.duals: Dict[str, DualState] = {}
         self._last_reports: Dict[str, List[ConstraintReport]] = {}
         if init_duals is not None:
@@ -183,7 +190,7 @@ class CAFLL(FederatedStrategy):
                 ratio = mean / budget
                 prev = state.lam.get(c.name, 0.0)
                 lam = self.controller.step(f"{name}:{c.name}", prev, ratio,
-                                           self.fl.duals)
+                                           self._dual_cfgs[c.name])
                 new_lam[c.name] = lam
                 reports.append(ConstraintReport(
                     name=c.name, profile=name, usage=mean, budget=budget,

@@ -135,10 +135,15 @@ def _leaf_spec(path: str, shape, recipe, n_lead: int) -> P:
 
 
 def _tree_paths(tree, prefix=""):
+    # PartitionSpec subclasses tuple (JAX >= 0.4.x): a spec is a LEAF,
+    # never a container — recursing into it would give a spec tree and
+    # its matching shape tree different paths for the same parameter
+    # (e.g. '/io/embed/0' vs '/io/embed'), so every tuple-valued leaf
+    # type must stop the walk here.
     if isinstance(tree, dict):
         for k in sorted(tree):
             yield from _tree_paths(tree[k], f"{prefix}/{k}")
-    elif isinstance(tree, (list, tuple)):
+    elif isinstance(tree, (list, tuple)) and not isinstance(tree, P):
         for i, v in enumerate(tree):
             yield from _tree_paths(v, f"{prefix}/{i}")
     else:

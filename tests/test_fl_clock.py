@@ -1,0 +1,549 @@
+"""Virtual wall-clock simulation (repro.fl.clock) + the latency-dual
+closed loop.
+
+Covers the PR's contract three ways:
+
+  * unit + hypothesis invariants for the clock primitives — monotone
+    time, no event loss, deterministic tie-breaking;
+  * stream equivalence — ``time_mode="rounds"`` is the default and
+    bit-identical to the pre-clock engine (the golden trajectories pin
+    that independently), and a no-straggler wall-clock run reproduces
+    the rounds-mode stream exactly;
+  * wall-clock semantics — late reports land at their simulated
+    arrival time (never later than the rounds-mode round-delay
+    quantization implies), FedBuff rounds end at their buffer events,
+    ``horizon_seconds`` bounds the run, and the latency constraint's
+    dual tightens the straggler deadline.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_fl_config
+from repro.configs.base import DualConfig
+from repro.constraints import dual_config_for
+from repro.data import load_corpus
+from repro.fl import (CAFLL, DeadlineAwareKnobPolicy, DeadlineStragglers,
+                      EventQueue, FedBuffAggregator, FederatedEngine,
+                      FleetClass, FleetDynamics, KnobRoundTime, NoStragglers,
+                      RoundCallback, SimClock, UniformSampler, make_fleet,
+                      make_round_time, uniform_fleet)
+from repro.fl.device import ClientInfo, DeviceProfile
+from repro.models import build
+
+try:        # hypothesis variants run where installed (CI); the seeded
+    from hypothesis import given, settings  # grid twins below always run
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# clock primitives
+# ---------------------------------------------------------------------------
+
+
+def test_sim_clock_monotone_and_logged():
+    clk = SimClock()
+    assert clk.now == 0.0
+    assert clk.advance_to(2.5, "a") == 2.5
+    # a past event is processed *now*: time never reverses
+    assert clk.advance_to(1.0, "b") == 2.5
+    assert clk.advance(0.5, "c") == 3.0
+    assert [e[0] for e in clk.events] == ["a", "b", "c"]
+    assert clk.events[1] == ("b", 1.0, 2.5)
+    with pytest.raises(AssertionError):
+        clk.advance(-0.1)
+
+
+def _check_clock_monotone(ts):
+    clk = SimClock()
+    readings = [clk.advance_to(t) for t in ts]
+    assert readings == sorted(readings)
+    assert len(clk.events) == len(ts)          # every event logged
+    if readings:
+        assert clk.now == max(ts)
+
+
+def _check_queue_partition(arrivals, cutoff):
+    q = EventQueue()
+    for i, a in enumerate(arrivals):
+        q.push(a, f"r{i}")
+    due = q.pop_until(cutoff)
+    rest = q.drain()
+    # partition: every event exactly once, on the right side of the cut
+    assert len(due) + len(rest) == len(arrivals)
+    assert all(e.arrival <= cutoff for e in due)
+    assert all(e.arrival > cutoff for e in rest)
+    got = sorted([e.report for e in due] + [e.report for e in rest])
+    assert got == sorted(f"r{i}" for i in range(len(arrivals)))
+    # delivery order: arrival time, then stamping order (ties resolve
+    # to push order, which keeps homogeneous cohorts in cohort order)
+    keys = [(e.arrival, e.seq) for e in due]
+    assert keys == sorted(keys)
+    assert len(q) == 0
+
+
+def test_sim_clock_monotone_seeded_sweep():
+    rng = np.random.default_rng(0)
+    for n in (0, 1, 7, 50):
+        _check_clock_monotone(list(rng.uniform(0.0, 1e6, size=n)))
+    _check_clock_monotone([5.0, 5.0, 1.0, 9.0, 0.0])       # ties + reversals
+
+
+def test_event_queue_partition_seeded_sweep():
+    rng = np.random.default_rng(1)
+    for n in (0, 1, 5, 40):
+        arrivals = list(rng.uniform(0.0, 100.0, size=n))
+        for cutoff in (0.0, 50.0, 100.0):
+            _check_queue_partition(arrivals, cutoff)
+    _check_queue_partition([2.0, 2.0, 2.0], 2.0)           # all-tie cut
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=100)
+    @given(st.lists(st.floats(min_value=0.0, max_value=1e6,
+                              allow_nan=False), max_size=50))
+    def test_sim_clock_monotone_under_any_event_order(ts):
+        _check_clock_monotone(ts)
+
+    @settings(deadline=None, max_examples=100)
+    @given(st.lists(st.floats(min_value=0.0, max_value=100.0,
+                              allow_nan=False), max_size=40),
+           st.floats(min_value=0.0, max_value=100.0, allow_nan=False))
+    def test_event_queue_no_loss_and_ordering(arrivals, cutoff):
+        _check_queue_partition(arrivals, cutoff)
+
+
+def test_knob_round_time_arms():
+    fl = get_fl_config()
+    rtm = KnobRoundTime.for_config(fl, server_seconds=0.1)
+    prof = DeviceProfile("d", fl.budgets, compute_scale=2.0)
+    ci = ClientInfo(0, prof)
+    from repro.core.policy import fedavg_knobs
+    kn = fedavg_knobs(fl)
+    # baseline knobs on calibration silicon = 1.0 round; 2x silicon = 2.0
+    assert rtm.client_seconds(ci, kn) == pytest.approx(
+        2.0 * kn.grad_accum)
+    # a missed deadline means the barrier waited it out
+    assert rtm.round_seconds([ci], [kn], [0.5, 3.0], [0], 1.5) == \
+        pytest.approx(1.5 + 0.1)
+    # everyone made it: the slowest survivor sets the pace
+    assert rtm.round_seconds([ci, ci], [kn, kn], [0.5, 1.2], [0, 1], 1.5) \
+        == pytest.approx(1.2 + 0.1)
+    # no straggler clock: knob-derived cohort time
+    assert rtm.round_seconds([ci], [kn], [], [0], None) == \
+        pytest.approx(2.0 * kn.grad_accum + 0.1)
+    # a round nobody could join still takes positive time
+    assert rtm.round_seconds([], [], [], [], None) > 0.0
+
+
+def test_make_round_time_resolution():
+    fl = get_fl_config()
+    rtm = make_round_time(None, fl)
+    assert isinstance(rtm, KnobRoundTime)
+    assert rtm.work_unit == fl.s_base * fl.b_base
+    inst = KnobRoundTime(work_unit=3.0)
+    assert make_round_time(inst, fl) is inst
+    with pytest.raises(ValueError):
+        make_round_time("sundial", fl)
+
+
+# ---------------------------------------------------------------------------
+# per-constraint DualConfig overrides
+# ---------------------------------------------------------------------------
+
+
+def test_dual_config_for_overrides():
+    base = DualConfig()
+    assert dual_config_for(base, None, "energy") is base
+    assert dual_config_for(base, {}, "energy") is base
+    out = dual_config_for(base, {"latency": {"eta": 1.0, "deadzone": 0.0}},
+                          "latency")
+    assert out.eta == 1.0 and out.deadzone == 0.0
+    assert out.lambda_max == base.lambda_max     # untouched fields kept
+    assert dual_config_for(base, {"latency": {"eta": 1.0}}, "energy") is base
+    full = DualConfig(eta=0.9)
+    assert dual_config_for(base, {"comm": full}, "comm") is full
+    with pytest.raises(TypeError):
+        dual_config_for(base, {"comm": {"not_a_field": 1}}, "comm")
+
+
+def test_cafll_per_constraint_dual_overrides():
+    fl = get_fl_config().replace(
+        constraints="paper+latency",
+        dual_overrides={"latency": {"eta": 1.0, "deadzone": 0.0}})
+    strat = CAFLL(fl)
+    profiles, _ = uniform_fleet(fl)
+    ci = ClientInfo(0, profiles["default"], shard_size=10)
+    # 2x over on comm AND latency: the latency dual must move at its
+    # own (faster) eta while comm moves at the shared paper eta
+    budgets = fl.budgets
+    usage = {"energy": budgets.energy, "comm": 2.0 * budgets.comm_mb,
+             "memory": budgets.memory, "temp": budgets.temp,
+             "latency": 2.0}
+    duals = strat.update_state([usage], [ci])["default"]
+    assert duals["comm"] == pytest.approx(fl.duals.eta * 1.0)
+    assert duals["latency"] == pytest.approx(1.0 * 1.0)
+    assert duals["energy"] == 0.0
+
+
+def test_cafll_rejects_unknown_override_names():
+    fl = get_fl_config().replace(dual_overrides={"latencyy": {"eta": 1.0}})
+    with pytest.raises(ValueError, match="latencyy"):
+        CAFLL(fl)
+
+
+# ---------------------------------------------------------------------------
+# latency-dual deadline control (unit)
+# ---------------------------------------------------------------------------
+
+
+def _plan(sampled, survivors, times, rnd=1):
+    from repro.fl.dynamics import RoundPlan
+    sampled, survivors = tuple(sampled), tuple(survivors)
+    return RoundPlan(round=rnd, available=sampled, sampled=sampled,
+                     survivors=survivors,
+                     dropped=tuple(c for c in sampled if c not in survivors),
+                     times=tuple(times))
+
+
+def test_latency_dual_tightens_deadline():
+    from repro.core.duals import DualState
+    fl = get_fl_config()
+    dyn = FleetDynamics(sampler=UniformSampler(2),
+                        stragglers=DeadlineStragglers(deadline=2.0))
+    pol = DeadlineAwareKnobPolicy(latency_gain=0.5, latency_budget=1.0)
+    # strong latency pressure seen at knob time...
+    lam = {r: 0.0 for r in ("energy", "comm", "memory", "temp")}
+    pol.knobs(DualState(lam={**lam, "latency": 2.0}), fl)
+    # ...and a fully reporting fleet: tighten toward budget/base = 0.5
+    pol.observe(_plan((0, 1), (0, 1), (0.4, 0.5)), [], dyn)
+    assert dyn.stragglers.deadline == pytest.approx(2.0 * 0.5)
+    # pressure cleared: a below-base scale drifts back toward the base
+    # at the relax rate (no permanent ratchet), converging to 1.0
+    pol.knobs(DualState(lam=lam), fl)
+    pol.observe(_plan((0, 1), (0, 1), (0.4, 0.5), rnd=2), [], dyn)
+    assert dyn.stragglers.deadline == pytest.approx(2.0 * 0.5 / 0.9)
+    for rnd in range(3, 30):
+        pol.knobs(DualState(lam=lam), fl)
+        pol.observe(_plan((0, 1), (0, 1), (0.4, 0.5), rnd=rnd), [], dyn)
+    assert dyn.stragglers.deadline == pytest.approx(2.0)
+    # re-applied pressure tightens again: the loop works both ways
+    pol.knobs(DualState(lam={**lam, "latency": 2.0}), fl)
+    pol.observe(_plan((0, 1), (0, 1), (0.4, 0.5), rnd=30), [], dyn)
+    assert dyn.stragglers.deadline == pytest.approx(1.0)
+    pol.reset()
+    assert dyn.stragglers.deadline == 2.0 and pol._latency_lam == 0.0
+
+
+def test_latency_dual_defers_to_starvation_recovery():
+    """Dual tightening must not fight the widening arm: with the fleet
+    starved the deadline still widens, pressure or not."""
+    from repro.core.duals import DualState
+    fl = get_fl_config()
+    dyn = FleetDynamics(sampler=UniformSampler(2),
+                        stragglers=DeadlineStragglers(deadline=1.0))
+    pol = DeadlineAwareKnobPolicy()
+    lam = {r: 0.0 for r in ("energy", "comm", "memory", "temp")}
+    pol.knobs(DualState(lam={**lam, "latency": 5.0}), fl)
+    pol.observe(_plan((0, 1), (), (3.0, 3.0)), [], dyn)
+    assert dyn.stragglers.deadline > 1.0
+
+
+def test_latency_tightening_respects_min_scale():
+    from repro.core.duals import DualState
+    fl = get_fl_config()
+    dyn = FleetDynamics(sampler=UniformSampler(2),
+                        stragglers=DeadlineStragglers(deadline=100.0))
+    pol = DeadlineAwareKnobPolicy(min_scale=0.25, latency_gain=10.0)
+    lam = {r: 0.0 for r in ("energy", "comm", "memory", "temp")}
+    for rnd in range(1, 6):
+        pol.knobs(DualState(lam={**lam, "latency": 10.0}), fl)
+        pol.observe(_plan((0, 1), (0, 1), (0.1, 0.1), rnd=rnd), [], dyn)
+    assert dyn.stragglers.deadline == pytest.approx(100.0 * 0.25)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    ds = load_corpus(target_bytes=60_000)
+    cfg = get_config("charlm-shakespeare").replace(
+        vocab_size=max(ds.vocab_size, 64), num_layers=2, d_model=32,
+        num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64)
+    fl = get_fl_config().replace(
+        rounds=3, num_clients=6, clients_per_round=3, s_base=3, b_base=8,
+        seq_len=16, eval_batches=1, eval_batch_size=8)
+    fl = fl.replace(duals=dataclasses.replace(fl.duals, s_min=2, b_min=4))
+    return ds, cfg, fl
+
+
+@pytest.fixture(scope="module")
+def tiny_model(tiny_setup):
+    _, cfg, _ = tiny_setup
+    return build(cfg)
+
+
+def _stream(res):
+    return [(r.round, r.participants, r.dropped, r.val_loss, r.duals)
+            for r in res.history]
+
+
+@pytest.mark.parametrize("method", ["fedavg", "cafl"])
+def test_rounds_mode_is_the_default_and_explicit(method, tiny_setup,
+                                                 tiny_model):
+    """run() == run(time_mode="rounds"): the clock refactor left the
+    default path untouched (the golden trajectories pin it against the
+    pre-clock engine independently)."""
+    ds, _, fl = tiny_setup
+    a = FederatedEngine(tiny_model, fl, ds, strategy=method).run()
+    b = FederatedEngine(tiny_model, fl, ds,
+                        strategy=method).run(time_mode="rounds")
+    assert _stream(a) == _stream(b)
+    # rounds mode still fills the sim accounting fields
+    assert all(r.round_seconds > 0 for r in a.history)
+    assert [r.sim_time for r in a.history] == \
+        sorted(r.sim_time for r in a.history)
+
+
+@pytest.mark.parametrize("method", ["fedavg", "cafl"])
+def test_wall_clock_stream_equals_rounds_without_stragglers(
+        method, tiny_setup, tiny_model):
+    """With no straggler clock and a sync barrier there is nothing for
+    wall-clock mode to reorder: the two modes must produce the same
+    stream bit-for-bit (same rng draws, same inbox order, same duals)."""
+    ds, _, fl = tiny_setup
+    a = FederatedEngine(tiny_model, fl, ds, strategy=method).run()
+    b = FederatedEngine(tiny_model, fl, ds,
+                        strategy=method).run(time_mode="wall_clock")
+    assert _stream(a) == _stream(b)
+
+
+def _hetero(fl):
+    return make_fleet(fl, [FleetClass("fast", 0.5),
+                           FleetClass("slow", 0.5, compute_scale=2.0)])
+
+
+def _straggler_dyn(fl, deadline=1.1):
+    return FleetDynamics(
+        sampler=UniformSampler(fl.clients_per_round),
+        stragglers=DeadlineStragglers.for_config(fl, deadline=deadline,
+                                                 jitter=0.2))
+
+
+def test_wall_clock_barrier_rounds_are_deadline_bounded(tiny_setup,
+                                                        tiny_model):
+    ds, _, fl = tiny_setup
+    profiles, cp = _hetero(fl)
+    eng = FederatedEngine(tiny_model, fl, ds, strategy="fedavg",
+                          profiles=profiles, client_profiles=cp,
+                          dynamics=_straggler_dyn(fl), aggregator="sync")
+    res = eng.run(time_mode="wall_clock")
+    deadline = 1.1
+    for r in res.history:
+        assert 0.0 < r.round_seconds <= deadline + 1e-9
+    times = [r.sim_time for r in res.history]
+    assert times == sorted(times) and times[0] > 0.0
+    assert eng.clock is not None and eng.clock.now == times[-1]
+
+
+class _UpdateCatcher(RoundCallback):
+    def __init__(self):
+        self.reports = []
+
+    def on_server_update(self, engine, update):
+        self.reports.extend(update.reports)
+
+
+def test_wall_clock_late_delivery_at_arrival_time(tiny_setup, tiny_model):
+    """Every report delivered after its training round (deadline
+    missers AND survivors whose round ended at an earlier buffer event)
+    lands in the round containing its simulated arrival — never later
+    (in seconds) than the rounds-mode ``ceil(t/deadline)``
+    quantization implies."""
+    ds, _, fl = tiny_setup
+    fl = fl.replace(rounds=5)
+    profiles, cp = _hetero(fl)
+    catcher = _UpdateCatcher()
+    deadline = 1.1
+    res = FederatedEngine(
+        tiny_model, fl, ds, strategy="fedavg", profiles=profiles,
+        client_profiles=cp, dynamics=_straggler_dyn(fl, deadline),
+        aggregator=FedBuffAggregator(buffer_size=2),
+        callbacks=[catcher]).run(time_mode="wall_clock")
+    starts = {r.round: r.sim_time - r.round_seconds for r in res.history}
+    ends = {r.round: r.sim_time for r in res.history}
+    late = [rep for rep in catcher.reports
+            if rep.round_submitted > rep.round_trained
+            and rep.arrival_time > 0.0]
+    assert late, "scenario must actually produce late deliveries"
+    assert any(len(r.late_arrivals) > 0 for r in res.history)
+    for rep in late:
+        t0, rnd = rep.round_trained, rep.round_submitted
+        abs_arrival = starts[t0] + rep.arrival_time
+        # landed in the round whose window contains the arrival
+        assert starts[rnd] <= abs_arrival + 1e-9
+        assert abs_arrival <= ends[rnd] + 1e-9
+        # and no later (in seconds) than the round-delay quantization
+        # (the rounds-mode schedule holds a miss for ceil(t/D) full
+        # deadline-lengths of simulated time after its round started)
+        assert abs_arrival <= starts[t0] + \
+            math.ceil(rep.arrival_time / deadline) * deadline + 1e-9
+
+
+def test_wall_clock_fedbuff_rounds_end_at_buffer_events(tiny_setup,
+                                                        tiny_model):
+    """A buffered-async round ends at its first mid-round update, so
+    FedBuff's simulated time runs ahead of the barrier's."""
+    ds, _, fl = tiny_setup
+    fl = fl.replace(rounds=5)
+    profiles, cp = _hetero(fl)
+
+    def run(agg):
+        return FederatedEngine(
+            tiny_model, fl, ds, strategy="fedavg", profiles=profiles,
+            client_profiles=cp, dynamics=_straggler_dyn(fl),
+            aggregator=agg).run(time_mode="wall_clock")
+
+    sync = run("sync")
+    buff = run(FedBuffAggregator(buffer_size=2))
+    assert buff.history[-1].sim_time < sync.history[-1].sim_time
+    # mid-round updates happened (not just final-drain bookkeeping)
+    assert sum(r.updates_applied for r in buff.history) >= 1
+
+
+def test_wall_clock_horizon_bounds_the_run(tiny_setup, tiny_model):
+    ds, _, fl = tiny_setup
+    profiles, cp = _hetero(fl)
+    horizon = 3.0
+    res = FederatedEngine(
+        tiny_model, fl, ds, strategy="fedavg", profiles=profiles,
+        client_profiles=cp, dynamics=_straggler_dyn(fl),
+        aggregator="sync").run(horizon_seconds=horizon)
+    assert res.history, "a horizon run must execute at least one round"
+    # every round except possibly the last STARTED before the horizon
+    for r in res.history:
+        assert r.sim_time - r.round_seconds < horizon
+    # and the run did not stop early: it ran until the budget was spent
+    assert res.history[-1].sim_time >= min(horizon, 1.1)
+    # horizon runs are not capped by fl.rounds
+    assert len(res.history) != fl.rounds or \
+        res.history[-1].sim_time >= horizon
+
+
+def test_unknown_time_mode_rejected(tiny_setup, tiny_model):
+    ds, _, fl = tiny_setup
+    with pytest.raises(ValueError, match="time_mode"):
+        FederatedEngine(tiny_model, fl, ds,
+                        strategy="fedavg").run(time_mode="sundial")
+
+
+def test_explicit_rounds_mode_beats_config_horizon(tiny_setup, tiny_model):
+    """Arguments beat the config: an explicit time_mode="rounds" must
+    not be silently flipped to wall clock by a leftover
+    fl.horizon_seconds, and an explicitly contradictory pair raises."""
+    ds, _, fl = tiny_setup
+    base = FederatedEngine(tiny_model, fl, ds, strategy="fedavg").run()
+    fl_h = fl.replace(horizon_seconds=50.0)
+    eng = FederatedEngine(tiny_model, fl_h, ds, strategy="fedavg")
+    res = eng.run(time_mode="rounds")
+    assert eng.time_mode == "rounds"
+    assert len(res.history) == fl.rounds
+    assert _stream(res) == _stream(base)
+    with pytest.raises(ValueError, match="horizon_seconds"):
+        eng.run(time_mode="rounds", horizon_seconds=5.0)
+    # an explicit round count caps a horizon run too
+    res = eng.run(rounds=2, horizon_seconds=50.0)
+    assert len(res.history) == 2
+
+
+class _ZeroRoundTime(KnobRoundTime):
+    def round_seconds(self, *a, **kw):
+        return 0.0
+
+
+def test_wall_clock_rejects_non_positive_round_durations(tiny_setup,
+                                                         tiny_model):
+    """A custom RoundTimeModel returning 0-length rounds must fail
+    loudly, not spin the horizon loop into the backstop."""
+    ds, _, fl = tiny_setup
+    eng = FederatedEngine(tiny_model, fl, ds, strategy="fedavg",
+                          round_time=_ZeroRoundTime.for_config(fl))
+    with pytest.raises(ValueError, match="positive"):
+        eng.run(time_mode="wall_clock")
+
+
+def test_wall_clock_misser_never_delivered_in_own_round(tiny_setup,
+                                                        tiny_model):
+    """A deadline-misser whose arrival falls inside the round's
+    server-cost tail (deadline < t <= deadline + server_seconds) must
+    still deliver a round late with staleness >= 1 — a miss is never a
+    same-round participant."""
+    ds, _, fl = tiny_setup
+    fl = fl.replace(rounds=3)
+    # slow tier finishes at 1.15: past the 1.1 deadline, inside the
+    # 1.1 + 0.2 server-cost tail
+    profiles, cp = make_fleet(fl, [
+        FleetClass("fast", 0.5),
+        FleetClass("slow", 0.5, compute_scale=1.15)])
+    dyn = FleetDynamics(
+        sampler=UniformSampler(fl.clients_per_round),
+        stragglers=DeadlineStragglers.for_config(fl, deadline=1.1,
+                                                 jitter=0.0))
+    catcher = _UpdateCatcher()
+    FederatedEngine(
+        tiny_model, fl, ds, strategy="fedavg", profiles=profiles,
+        client_profiles=cp, dynamics=dyn,
+        aggregator=FedBuffAggregator(buffer_size=100),  # drain at finalize
+        round_time=KnobRoundTime.for_config(fl, server_seconds=0.2),
+        callbacks=[catcher]).run(time_mode="wall_clock")
+    missers = [rep for rep in catcher.reports if rep.arrival_time > 1.1]
+    assert missers, "scenario must produce tail-window missers"
+    for rep in missers:
+        assert rep.round_submitted > rep.round_trained
+        assert rep.staleness >= 1
+
+
+def test_latency_closed_loop_tightens_deadline_in_wall_clock(tiny_setup,
+                                                             tiny_model):
+    """The full ROADMAP loop: latency constraint -> dual -> deadline ->
+    simulated round length. A loose deadline lets a slow tier's ~2.0
+    arrivals through, so the mean arrival ratio sits over the 1.0
+    latency budget and the dual builds; the deadline-aware policy pulls
+    the deadline down from that pressure until the slow tier is outside
+    it, after which only in-budget arrivals feed the dual and it
+    settles. min_report_frac is below the fast tier's share, so the
+    starvation arm never fights the tightening."""
+    from repro.fl import FullParticipation
+    ds, _, fl = tiny_setup
+    fl = fl.replace(rounds=6, constraints="paper+latency",
+                    dual_overrides={"latency": {"eta": 1.0,
+                                                "deadzone": 0.0}})
+    dyn = FleetDynamics(
+        sampler=FullParticipation(),
+        stragglers=DeadlineStragglers.for_config(fl, deadline=4.0,
+                                                 jitter=0.0))
+    profiles, cp = _hetero(fl)          # fast 1.0x / slow 2.0x tiers
+    strat = CAFLL(fl, knob_policy=DeadlineAwareKnobPolicy(
+        min_report_frac=0.4))
+    eng = FederatedEngine(tiny_model, fl, ds, strategy=strat,
+                          profiles=profiles, client_profiles=cp,
+                          dynamics=dyn, aggregator="sync")
+    res = eng.run(time_mode="wall_clock")
+    # pressure built on the latency dual...
+    assert any(r.constraints["latency"]["lam"] > 0.0 for r in res.history)
+    # ...and the closed loop tightened the deadline, which capped at
+    # least one later round's simulated cost below the opening round's
+    # (Eq. 8 token preservation keeps per-client compute roughly
+    # constant, so only the deadline can shorten a straggler-bound
+    # round)
+    assert dyn.stragglers.deadline < 4.0
+    assert min(r.round_seconds for r in res.history[1:]) < \
+        res.history[0].round_seconds
