@@ -1,4 +1,10 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+All CSV output — `python -m benchmarks.run` aggregate runs and each
+module's standalone ``main()`` alike — goes through ``emit`` /
+``emit_snapshot`` here, so the two invocation paths print identical
+rows (one ``name,us_per_call,derived`` header per process).
+"""
 from __future__ import annotations
 
 import json
@@ -6,6 +12,9 @@ import os
 import time
 
 RESULTS = os.environ.get("RESULTS_DIR", "results")
+
+CSV_HEADER = "name,us_per_call,derived"
+_header_emitted = False
 
 
 def load_fl(method: str):
@@ -32,19 +41,61 @@ def load_dryrun():
 
 
 def timeit(fn, *args, n_warmup: int = 2, n_iter: int = 10) -> float:
-    """Median wall time per call in microseconds."""
-    import jax
-    for _ in range(n_warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(n_iter):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    """Median wall time per call in microseconds (legacy shim over
+    ``repro.bench.time_callable``)."""
+    from repro.bench import time_callable
+    return time_callable(fn, *args, warmup=n_warmup,
+                         repeats=n_iter).median_us
 
 
 def emit(rows):
+    """Print legacy-format CSV rows, emitting the header exactly once
+    per process regardless of how many modules emit."""
+    global _header_emitted
+    if not _header_emitted:
+        print(CSV_HEADER)
+        _header_emitted = True
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def snapshot_rows(snap):
+    """Flatten a ``repro.bench`` snapshot into legacy CSV rows: one row
+    per metric (timed ``us`` metrics fill the ``us_per_call`` column),
+    plus one row per context string so the old derived info stays
+    greppable."""
+    rows = []
+    for rec in snap.records:
+        for m in rec.metrics:
+            us = m.value if m.unit == "us" else 0.0
+            derived = (f"n={m.n}" if m.unit == "us"
+                       else f"{m.value:.4g}{m.unit}")
+            rows.append((f"{rec.benchmark}.{m.name}", us, derived))
+        for key, val in rec.context.items():
+            rows.append((f"{rec.benchmark}.{key}", 0.0, val))
+    return rows
+
+
+def emit_snapshot(snap):
+    emit(snapshot_rows(snap))
+
+
+def run_area_cli(area: str, argv=None):
+    """Standalone-module entry: run one registry area at ``--scale``
+    and return the snapshot (optionally writing it with ``--out``)."""
+    import argparse
+    import sys
+
+    from repro.bench import run_area
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="full",
+                    choices=("tiny", "smoke", "full"))
+    ap.add_argument("--out", default=None,
+                    help="also write the snapshot JSON here")
+    args = ap.parse_args(argv)
+    snap = run_area(area, scale=args.scale,
+                    log=lambda m: print(m, file=sys.stderr))
+    if args.out:
+        snap.save(args.out)
+    return snap

@@ -1,55 +1,113 @@
-"""Executor micro-benchmark: sequential Python loop vs the batched
-(jit + vmap-of-scan) LocalTrain path, same tiny char-LM round — plus a
-fleet-dynamics configuration (uniform K-of-N sampling with deadline
-stragglers) showing the engine-level round cost of partial
-participation vs the full static fleet, a sync-vs-FedBuff
-aggregator comparison under stragglers (rounds/sec and
-rounds-to-target-loss: the barrier discards deadline-missers, the
-buffered async path applies them late), a virtual wall-clock
-comparison (``time_mode="wall_clock"``: simulated *seconds* to a
-target loss for the wait-for-all barrier vs deadline-discard vs
-FedBuff — the axis rounds-to-target cannot rank, since the three
-policies' rounds cost different amounts of simulated time), and a
-dual-controller comparison (deadzone vs adaptive vs PI) on the
-calibrated proxy control loop: rounds until every constraint first
-enters its deadzone band, and the tail violation ratio each law
-settles at.
+"""Federated-engine benchmarks on the ``repro.bench`` harness (area
+``fl_engine``), snapshotted to ``BENCH_fl_engine.json``:
 
-    PYTHONPATH=src:. python benchmarks/fl_engine_bench.py
+- ``fl.executor`` — sequential Python loop vs the batched
+  (jit + vmap-of-scan) LocalTrain path on the same tiny char-LM round;
+  the speedup is a typed ``batched_speedup`` metric (higher is better —
+  it regresses *downward*).
+- ``fl.dynamics`` — engine-level round cost of K-of-N sampling with
+  deadline stragglers vs the full static fleet, retraces included
+  (survivor-group shapes change between rounds; that cost is the
+  scenario's, not warmup).
+- ``fl.aggregator`` — sync barrier vs FedBuff buffered async under
+  stragglers: mean round wall-clock plus ``rounds_to_target`` (the
+  metric async actually buys; a miss records as rounds+1 so later
+  regressions stay visible).
+- ``fl.wall_clock`` — simulated *seconds* to a target loss under
+  ``time_mode="wall_clock"`` for wait-for-all / deadline-discard /
+  FedBuff: deterministic given the seed, so these ``du`` metrics
+  ratchet tightly.
+- ``fl.controller`` — dual-controller laws (deadzone/adaptive/PI) on
+  the calibrated proxy control loop: rounds until the deadzone band and
+  tail violation ratio; host-side float math, tightest bands of all.
 
-Emits wall-clock per round (post-warmup median) for each executor and
-the speedup, in the same CSV row format as the other benchmarks.
+    PYTHONPATH=src:. python benchmarks/fl_engine_bench.py [--scale smoke|full|tiny]
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 
-from benchmarks.common import emit
+from repro.bench import MetricSpec, TimingStats, benchmark
+
+AREA = "fl_engine"
+
+# Wall-clock metrics move across machines: 2x band. Simulated /
+# derived metrics are seed-deterministic: tight bands (the small atol
+# absorbs cross-BLAS loss wiggle flipping a hit by one round).
+_US = dict(unit="us", direction="lower", rtol=1.0)
+
+_MODEL_KEYS = ("corpus_bytes", "num_layers", "d_model", "num_heads",
+               "head_dim", "d_ff", "num_clients", "clients_per_round",
+               "s_base", "b_base", "seq_len")
+
+_FULL_MODEL = {"corpus_bytes": 120_000, "num_layers": 3, "d_model": 96,
+               "num_heads": 4, "head_dim": 24, "d_ff": 192,
+               "num_clients": 8, "clients_per_round": 6,
+               "s_base": 10, "b_base": 16, "seq_len": 32}
+_SMOKE_MODEL = {"corpus_bytes": 60_000, "num_layers": 2, "d_model": 64,
+                "num_heads": 4, "head_dim": 16, "d_ff": 128,
+                "num_clients": 6, "clients_per_round": 4,
+                "s_base": 6, "b_base": 8, "seq_len": 32}
+_TINY_MODEL = {"corpus_bytes": 30_000, "num_layers": 2, "d_model": 32,
+               "num_heads": 2, "head_dim": 16, "d_ff": 64,
+               "num_clients": 4, "clients_per_round": 2,
+               "s_base": 3, "b_base": 4, "seq_len": 16}
 
 
-def rows():
+def _setup(params):
+    """Shared model/config/data setup for the engine benchmarks."""
     from repro.configs import get_config, get_fl_config
+    from repro.data import load_corpus
+    from repro.models import build
+
+    ds = load_corpus(target_bytes=params["corpus_bytes"])
+    cfg = get_config("charlm-shakespeare").replace(
+        vocab_size=max(ds.vocab_size, 64), num_layers=params["num_layers"],
+        d_model=params["d_model"], num_heads=params["num_heads"],
+        num_kv_heads=params["num_heads"], head_dim=params["head_dim"],
+        d_ff=params["d_ff"])
+    fl = get_fl_config().replace(
+        num_clients=params["num_clients"],
+        clients_per_round=params["clients_per_round"],
+        s_base=params["s_base"], b_base=params["b_base"],
+        seq_len=params["seq_len"])
+    fl = fl.replace(duals=dataclasses.replace(fl.duals, s_min=4, b_min=4))
+    return build(cfg), fl, ds
+
+
+def _round_mean_us(timing, rounds):
+    """Mean round seconds as a pseudo-TimingStats (first round dropped
+    as compile when more than one was timed), in microseconds."""
+    seconds = timing.round_seconds[1:] or timing.round_seconds
+    mean = sum(seconds) / len(seconds)
+    lo, hi = min(seconds), max(seconds)
+    return TimingStats(median_us=mean * 1e6, iqr_us=(hi - lo) * 1e6,
+                       n=len(seconds))
+
+
+@benchmark(
+    "fl.executor", AREA,
+    metrics=[MetricSpec("sequential_round_us", **_US),
+             MetricSpec("batched_round_us", **_US),
+             MetricSpec("batched_speedup", unit="x", direction="higher",
+                        rtol=0.35, atol=0.15)],
+    presets={"full": {**_FULL_MODEL, "repeats": 3},
+             "smoke": {**_SMOKE_MODEL, "repeats": 3},
+             "tiny": {**_TINY_MODEL, "repeats": 2}},
+    description="sequential vs batched (jit+vmap-of-scan) LocalTrain round")
+def executor_bench(params):
     from repro.core.client import ClientRunner
     from repro.core.policy import fedavg_knobs
     from repro.core.resources import calibrate
-    from repro.data import load_corpus
     from repro.data.federated import FederatedData
     from repro.fl import ClientInfo, DeviceProfile, make_executor
-    from repro.models import build
 
-    ds = load_corpus(target_bytes=120_000)
-    cfg = get_config("charlm-shakespeare").replace(
-        vocab_size=max(ds.vocab_size, 64), num_layers=3, d_model=96,
-        num_heads=4, num_kv_heads=4, head_dim=24, d_ff=192)
-    fl = get_fl_config().replace(num_clients=8, clients_per_round=6,
-                                 s_base=10, b_base=16, seq_len=32)
-    fl = fl.replace(duals=dataclasses.replace(fl.duals, s_min=4, b_min=4))
-    model = build(cfg)
+    model, fl, ds = _setup(params)
     import jax
-    params = model.init(jax.random.PRNGKey(0))
+    model_params = model.init(jax.random.PRNGKey(0))
     from repro.core.freezing import count_params
-    resources = calibrate(count_params(params), fl)
+    resources = calibrate(count_params(model_params), fl)
     data = FederatedData(ds.train, fl.num_clients, seed=fl.seed)
     knobs = fedavg_knobs(fl)
     profile = DeviceProfile("default", fl.budgets, resources=resources)
@@ -57,130 +115,151 @@ def rows():
                for i in range(fl.clients_per_round)]
     assignments = [(ci, knobs) for ci in clients]
 
-    out = []
-    timings = {}
+    out = {"context": {"cohort":
+                       f"{fl.clients_per_round}clients*s{knobs.s}*b{knobs.b}"}}
+    medians = {}
     for name in ("sequential", "batched"):
         runner = ClientRunner(model, fl, data, resources)
         executor = make_executor(name, runner)
-        executor.run_round(params, assignments)       # warmup / compile
+        executor.run_round(model_params, assignments)    # warmup / compile
         times = []
-        for _ in range(3):
+        for _ in range(params["repeats"]):
             t0 = time.perf_counter()
-            executor.run_round(params, assignments)
+            executor.run_round(model_params, assignments)
             times.append(time.perf_counter() - t0)
         times.sort()
         med = times[len(times) // 2]
-        timings[name] = med
-        out.append((f"fl.executor.{name}.round", med * 1e6,
-                    f"{fl.clients_per_round}clients*s{knobs.s}*b{knobs.b}"))
-    out.append(("fl.executor.batched_speedup", 0.0,
-                f"{timings['sequential'] / timings['batched']:.2f}x"))
-    out += _dynamics_rows(model, fl, ds)
-    out += _aggregator_rows(model, fl, ds)
-    out += _wall_clock_rows(model, fl, ds)
-    out += _controller_rows()
+        medians[name] = med
+        out[f"{name}_round_us"] = TimingStats(
+            median_us=med * 1e6, iqr_us=(times[-1] - times[0]) * 1e6,
+            n=len(times))
+    out["batched_speedup"] = medians["sequential"] / medians["batched"]
     return out
 
 
-def _dynamics_rows(model, fl, ds):
-    """Engine-level rounds: static full cohort vs K-of-N sampling with
-    deadline stragglers (survivor-only execution means dropped clients
-    cost the simulator nothing). Reported as the mean round time
-    *including* jit retraces — under dynamics the survivor-group size
-    and CAFL knob shapes change between rounds, so retracing is part of
-    the scenario's real cost, not warmup to be excluded."""
+@benchmark(
+    "fl.dynamics", AREA,
+    metrics=[MetricSpec("full_round_mean_us", **_US),
+             MetricSpec("sampled_round_mean_us", **_US)],
+    presets={"full": {**_FULL_MODEL, "rounds": 4, "cohort": 4,
+                      "deadline": 2.0},
+             "smoke": {**_SMOKE_MODEL, "rounds": 3, "cohort": 3,
+                       "deadline": 2.0},
+             "tiny": {**_TINY_MODEL, "rounds": 2, "cohort": 2,
+                      "deadline": 2.0}},
+    description="static full cohort vs K-of-N sampling with deadline "
+                "stragglers, mean round time incl. retraces")
+def dynamics_bench(params):
     from repro.fl import (DeadlineStragglers, FederatedEngine, FleetDynamics,
                           FullParticipation, TimingCallback, UniformSampler)
 
-    fl_bench = fl.replace(rounds=4, eval_batches=1, eval_batch_size=16,
-                          clients_per_round=4)
+    model, fl, ds = _setup(params)
+    fl_bench = fl.replace(rounds=params["rounds"], eval_batches=1,
+                          eval_batch_size=16,
+                          clients_per_round=params["cohort"])
     scenarios = {
         "full": FleetDynamics(sampler=FullParticipation()),
         "sampled": FleetDynamics(
             sampler=UniformSampler(fl_bench.clients_per_round),
-            stragglers=DeadlineStragglers.for_config(fl_bench, deadline=2.0,
-                                                     jitter=0.3)),
+            stragglers=DeadlineStragglers.for_config(
+                fl_bench, deadline=params["deadline"], jitter=0.3)),
     }
-    out = []
+    out = {"context": {}}
     for name, dyn in scenarios.items():
         timing = TimingCallback()
         res = FederatedEngine(model, fl_bench, ds, strategy="cafl",
                               executor="batched", dynamics=dyn,
                               callbacks=[timing]).run()
-        seconds = timing.round_seconds[1:]           # drop first compile
-        mean = sum(seconds) / len(seconds)
+        out[f"{name}_round_mean_us"] = _round_mean_us(timing,
+                                                      fl_bench.rounds)
         parts = sum(len(r.participants) for r in res.history)
         drops = sum(len(r.dropped) for r in res.history)
-        out.append((f"fl.engine.{name}.round_mean", mean * 1e6,
-                    f"{parts}reported+{drops}dropped,incl-retraces"))
+        out["context"][name] = f"{parts}reported+{drops}dropped,incl-retraces"
     return out
 
 
-def _aggregator_rows(model, fl, ds):
-    """Server-update policies under stragglers: the sync barrier vs
-    FedBuff buffered async, same fleet and deadline. Reported as mean
-    round wall-clock (rounds/sec, retraces included — late-report
-    execution changes group shapes) plus rounds-to-target-loss, the
-    metric the async path actually buys: late reports are applied with
-    a staleness discount instead of discarded, so the same cohort
-    budget reaches the target in fewer rounds."""
+@benchmark(
+    "fl.aggregator", AREA,
+    metrics=[MetricSpec("sync_round_mean_us", **_US),
+             MetricSpec("fedbuff_round_mean_us", **_US),
+             MetricSpec("sync_rounds_to_target", unit="rounds",
+                        direction="lower", rtol=0.0, atol=1.0),
+             MetricSpec("fedbuff_rounds_to_target", unit="rounds",
+                        direction="lower", rtol=0.0, atol=1.0)],
+    presets={"full": {**_FULL_MODEL, "rounds": 6, "cohort": 4,
+                      "deadline": 1.1, "buffer_size": 3},
+             "smoke": {**_SMOKE_MODEL, "rounds": 4, "cohort": 3,
+                       "deadline": 1.1, "buffer_size": 2},
+             "tiny": {**_TINY_MODEL, "rounds": 2, "cohort": 2,
+                      "deadline": 1.1, "buffer_size": 2}},
+    description="sync barrier vs FedBuff under stragglers: round cost and "
+                "rounds-to-target-loss (miss records as rounds+1)")
+def aggregator_bench(params):
     from repro.fl import (DeadlineStragglers, FedBuffAggregator,
                           FederatedEngine, FleetDynamics, TimingCallback,
                           UniformSampler)
 
-    fl_bench = fl.replace(rounds=6, eval_batches=1, eval_batch_size=16,
-                          clients_per_round=4)
+    model, fl, ds = _setup(params)
+    fl_bench = fl.replace(rounds=params["rounds"], eval_batches=1,
+                          eval_batch_size=16,
+                          clients_per_round=params["cohort"])
 
     def dyn():
         return FleetDynamics(
             sampler=UniformSampler(fl_bench.clients_per_round),
-            stragglers=DeadlineStragglers.for_config(fl_bench, deadline=1.1,
-                                                     jitter=0.3))
+            stragglers=DeadlineStragglers.for_config(
+                fl_bench, deadline=params["deadline"], jitter=0.3))
 
-    runs = {}
-    out = []
+    runs, out = {}, {"context": {}}
     for name, agg in (("sync", "sync"),
-                      ("fedbuff", FedBuffAggregator(buffer_size=3))):
+                      ("fedbuff",
+                       FedBuffAggregator(buffer_size=params["buffer_size"]))):
         timing = TimingCallback()
         res = FederatedEngine(model, fl_bench, ds, strategy="fedavg",
                               executor="batched", dynamics=dyn(),
                               aggregator=agg, callbacks=[timing]).run()
         runs[name] = res
-        seconds = timing.round_seconds[1:]           # drop first compile
-        mean = sum(seconds) / len(seconds)
+        out[f"{name}_round_mean_us"] = _round_mean_us(timing,
+                                                      fl_bench.rounds)
         applied = sum(r.reports_applied for r in res.history)
         late = sum(len(r.late_arrivals) for r in res.history)
-        out.append((f"fl.aggregator.{name}.round_mean", mean * 1e6,
-                    f"{applied}applied({late}late),{1.0 / mean:.2f}rounds/s"))
+        out["context"][name] = f"{applied}applied({late}late)"
     # rounds to the sync run's final loss: the async path's win metric
     target = runs["sync"].history[-1].val_loss
+    out["context"]["target"] = f"{target:.4f}"
     for name, res in runs.items():
         hit = next((r.round for r in res.history if r.val_loss <= target),
                    None)
-        out.append((f"fl.aggregator.{name}.rounds_to_target", 0.0,
-                    f"target={target:.3f},"
-                    f"{'hit@%d' % hit if hit else 'miss@%d' % fl_bench.rounds}"))
+        out[f"{name}_rounds_to_target"] = float(
+            hit if hit is not None else fl_bench.rounds + 1)
     return out
 
 
-def _wall_clock_rows(model, fl, ds):
-    """The virtual wall clock's headline metric: *simulated seconds* to
-    a target loss under ``time_mode="wall_clock"``, for the three
-    server policies the async story compares — a wait-for-all barrier
-    (generous deadline: nothing lost, rounds cost the slow tier's full
-    compute time), the deadline-discard barrier (tight deadline: rounds
-    cost one deadline, stragglers' work is thrown away), and FedBuff
-    (tight deadline, rounds end at buffer-fill events, stragglers
-    deliver late at their simulated arrival time). Rounds-to-target
-    cannot rank these fairly — their rounds cost different amounts of
-    simulated time; seconds-to-target is the axis the paper's
-    latency/thermal story actually cares about."""
+@benchmark(
+    "fl.wall_clock", AREA,
+    metrics=[MetricSpec(f"{p}_{m}", unit="du", direction="lower",
+                        rtol=0.25, atol=a)
+             for p in ("sync", "deadline_discard", "fedbuff")
+             for m, a in (("du_per_round", 0.1),
+                          ("seconds_to_target", 1.0))],
+    presets={"full": {**_FULL_MODEL, "rounds": 6, "cohort": 4,
+                      "buffer_size": 3},
+             "smoke": {**_SMOKE_MODEL, "rounds": 4, "cohort": 3,
+                       "buffer_size": 2},
+             "tiny": {**_TINY_MODEL, "rounds": 2, "cohort": 2,
+                      "buffer_size": 2}},
+    description="simulated seconds to target loss (wall_clock mode): "
+                "wait-for-all vs deadline-discard vs FedBuff; a miss "
+                "records as the run's total simulated time + 1du")
+def wall_clock_bench(params):
     from repro.fl import (DeadlineStragglers, FedBuffAggregator,
                           FederatedEngine, FleetClass, FleetDynamics,
                           UniformSampler, make_fleet, seconds_to_target)
 
-    fl_bench = fl.replace(rounds=6, eval_batches=1, eval_batch_size=16,
-                          clients_per_round=4)
+    model, fl, ds = _setup(params)
+    fl_bench = fl.replace(rounds=params["rounds"], eval_batches=1,
+                          eval_batch_size=16,
+                          clients_per_round=params["cohort"])
     profiles, cp = make_fleet(fl_bench, [
         FleetClass("fast", fraction=0.5),
         FleetClass("slow", fraction=0.5, compute_scale=2.0)])
@@ -195,10 +274,10 @@ def _wall_clock_rows(model, fl, ds):
     scenarios = {
         "sync": ("sync", 4.0),                 # wait-for-all barrier
         "deadline_discard": ("sync", 1.1),     # tight barrier, discards
-        "fedbuff": (FedBuffAggregator(buffer_size=3), 1.1),
+        "fedbuff": (FedBuffAggregator(buffer_size=params["buffer_size"]),
+                    1.1),
     }
-    runs = {}
-    out = []
+    runs, out = {}, {"context": {}}
     for name, (agg, deadline) in scenarios.items():
         res = FederatedEngine(model, fl_bench, ds, strategy="fedavg",
                               executor="batched", profiles=profiles,
@@ -206,53 +285,54 @@ def _wall_clock_rows(model, fl, ds):
                               aggregator=agg).run(time_mode="wall_clock")
         runs[name] = res
         sim = res.history[-1].sim_time
-        out.append((f"fl.clock.{name}.sim_seconds_total", 0.0,
-                    f"{sim:.2f}du,{len(res.history)}rounds,"
-                    f"{sim / len(res.history):.2f}du/round"))
+        out[f"{name}_du_per_round"] = sim / len(res.history)
+        out["context"][name] = f"{sim:.2f}du,{len(res.history)}rounds"
     # seconds to the weakest policy's final loss (deadline units: 1.0 =
-    # one baseline round on calibration silicon); the start-of-round
-    # charge convention lives in repro.fl.clock.seconds_to_target
+    # one baseline round on calibration silicon)
     target = max(res.history[-1].val_loss for res in runs.values())
+    out["context"]["target"] = f"{target:.4f}"
     for name, res in runs.items():
         hit = seconds_to_target(res, target)
-        out.append((f"fl.clock.{name}.seconds_to_target", 0.0,
-                    f"target={target:.3f},"
-                    + (f"hit@{hit:.2f}du" if hit is not None
-                       else f"miss@{res.history[-1].sim_time:.2f}du")))
+        out[f"{name}_seconds_to_target"] = (
+            hit if hit is not None else res.history[-1].sim_time + 1.0)
     return out
 
 
-def _controller_rows():
-    """Dual-controller comparison on the paper's calibrated proxy
-    control loop (``repro.constraints.proxy_control_loop`` — no NN; the
-    constraint dynamics are host-side float math, so the *law* is
-    what's measured, not the executor). Two metrics per controller:
-    rounds until the worst constraint ratio first enters the deadzone
-    satisfaction band (<= 1 + delta), and the tail mean of that worst
-    ratio (steady-state violation). FedAvg's fixed knobs start ~5x over
-    the comm budget, so faster laws close the gap in fewer rounds."""
+@benchmark(
+    "fl.controller", AREA,
+    metrics=[MetricSpec(f"{c}_{m}", unit=u, direction="lower",
+                        rtol=r, atol=a)
+             for c in ("deadzone", "adaptive", "pi")
+             for m, u, r, a in (("rounds_to_satisfaction", "rounds",
+                                 0.0, 2.0),
+                                ("tail_violation", "ratio", 0.05, 0.01))],
+    presets={"full": {"rounds": 80, "tail": 10},
+             "smoke": {"rounds": 80, "tail": 10},
+             "tiny": {"rounds": 40, "tail": 5}},
+    description="dual-controller laws on the calibrated proxy loop: rounds "
+                "until the deadzone band, tail violation ratio (host-side "
+                "float math; a miss records as rounds+1)")
+def controller_bench(params):
     from repro.configs import get_fl_config
     from repro.constraints import (proxy_control_loop, rounds_to_band,
                                    tail_worst_ratio)
 
     fl = get_fl_config()
-    rounds, tail = 80, 10
+    rounds, tail = params["rounds"], params["tail"]
     band = 1.0 + fl.duals.deadzone
-    out = []
+    out = {"context": {"band": f"<={band:.2f}"}}
     for name in ("deadzone", "adaptive", "pi"):
         history = proxy_control_loop(fl, controller=name, rounds=rounds)
         hit = rounds_to_band(history, band)
-        out.append((f"fl.controller.{name}.rounds_to_satisfaction", 0.0,
-                    f"{'hit@%d' % hit if hit else 'miss@%d' % rounds},"
-                    f"band<={band:.2f}"))
-        out.append((f"fl.controller.{name}.tail_violation", 0.0,
-                    f"worst_ratio={tail_worst_ratio(history, tail):.3f},"
-                    f"tail{tail}"))
+        out[f"{name}_rounds_to_satisfaction"] = float(
+            hit if hit is not None else rounds + 1)
+        out[f"{name}_tail_violation"] = tail_worst_ratio(history, tail)
     return out
 
 
-def main():
-    emit(rows())
+def main(argv=None):
+    from benchmarks.common import emit_snapshot, run_area_cli
+    emit_snapshot(run_area_cli(AREA, argv))
 
 
 if __name__ == "__main__":

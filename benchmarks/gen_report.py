@@ -1,14 +1,19 @@
-"""Render markdown tables for EXPERIMENTS.md from results/.
+"""Render markdown tables for EXPERIMENTS.md from results/ and the
+committed BENCH_<area>.json perf baselines (typed ``repro.bench``
+records — the bench section never scrapes CSV text).
 
-    PYTHONPATH=src python -m benchmarks.gen_report [--section dryrun|roofline|paper]
+    PYTHONPATH=src python -m benchmarks.gen_report \
+        [--section dryrun|roofline|paper|bench]
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 
 from benchmarks.common import RESULTS, load_dryrun, load_fl
+from benchmarks.run import REPO_ROOT
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 ARCH_ORDER = ["paligemma-3b", "recurrentgemma-2b", "minitron-8b", "gemma2-9b",
@@ -98,6 +103,39 @@ def paper_table() -> str:
     return "\n".join(lines)
 
 
+def bench_table(baseline_dir: str = REPO_ROOT) -> str:
+    """Perf-trajectory table from the committed BENCH_<area>.json
+    snapshots (typed records, not CSV)."""
+    from repro.bench import Snapshot
+
+    paths = sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json")))
+    if not paths:
+        return "(no BENCH_*.json baselines — run " \
+               "`python -m benchmarks.run --record`)"
+    blocks = []
+    for path in paths:
+        snap = Snapshot.load(path)
+        fp = snap.fingerprint
+        lines = [f"**{snap.area}** @{snap.scale} — jax {fp.jax_version} / "
+                 f"{fp.backend} ({fp.device_kind}, {fp.cpu_count} cpu)",
+                 "",
+                 "| benchmark | metric | value | direction | noise band | n |",
+                 "|---|---|---|---|---|---|"]
+        for rec in snap.records:
+            for m in rec.metrics:
+                band = f"rtol={m.rtol:g}" + (f", atol={m.atol:g}"
+                                             if m.atol else "")
+                lines.append(
+                    f"| {rec.benchmark} | {m.name} | {m.value:.4g} {m.unit} "
+                    f"| {m.direction} is better | {band} | {m.n} |")
+            if rec.context:
+                ctx = ", ".join(f"{k}={v}" for k, v in rec.context.items())
+                lines.append(f"| {rec.benchmark} | *(context)* | {ctx} "
+                             f"| | | |")
+        blocks.append("\n".join(lines))
+    return "\n\n".join(blocks)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all")
@@ -111,6 +149,9 @@ def main():
     if args.section in ("paper", "all"):
         print("\n### Paper Table 1\n")
         print(paper_table())
+    if args.section in ("bench", "all"):
+        print("\n### Perf trajectory (committed baselines)\n")
+        print(bench_table())
 
 
 if __name__ == "__main__":

@@ -1,60 +1,120 @@
-"""Timed microbenchmarks (CPU wall-clock): quantization round-trip,
-blockwise attention, charlm train step, FL LocalTrain round. These are the
-only true `us_per_call` rows — the table/figure benchmarks are analyses.
+"""Timed kernel microbenchmarks (CPU wall-clock): quantization
+round-trip, blockwise attention, charlm train step — registered on the
+``repro.bench`` harness (area ``kernels``) so their timings and derived
+throughputs are typed, snapshotted to ``BENCH_kernels.json``, and
+ratcheted by ``python -m benchmarks.run --check``.
+
+    PYTHONPATH=src:. python benchmarks/kernel_bench.py [--scale smoke|full|tiny]
+
+Wall-clock metrics carry generous noise bands (they move across
+machines — the snapshot's fingerprint says where the baseline was
+measured); the derived GB/s / GFLOP/s / tok/s throughputs are their
+inverses and ratchet with matching bands.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.bench import MetricSpec, benchmark, time_callable
 
-from benchmarks.common import emit, timeit
+AREA = "kernels"
+
+# Wall-clock noise bands: a timed metric may run up to 2x slower
+# (rtol=1.0) before the ratchet fails it; throughput, its inverse, may
+# halve (rtol=0.5 against the higher-is-better direction).
+_US = dict(unit="us", direction="lower", rtol=1.0)
+_THROUGHPUT = dict(direction="higher", rtol=0.5)
 
 
-def rows():
-    out = []
-    rng = np.random.default_rng(0)
+@benchmark(
+    "kernel.quantize_roundtrip", AREA,
+    metrics=[MetricSpec("roundtrip_8bit_us", **_US),
+             MetricSpec("bandwidth_8bit_gb_s", unit="GB/s", **_THROUGHPUT),
+             MetricSpec("roundtrip_2bit_us", **_US),
+             MetricSpec("bandwidth_2bit_gb_s", unit="GB/s", **_THROUGHPUT)],
+    presets={"full": {"size": 1 << 20, "repeats": 10},
+             "smoke": {"size": 1 << 18, "repeats": 5},
+             "tiny": {"size": 1 << 14, "repeats": 3}},
+    description="quantize->dequantize round-trip, the CAFL-L wire hot spot "
+                "(ref path on CPU)")
+def quantize_roundtrip(params):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
 
-    # quantization round-trip (the CAFL-L wire hot spot), ref path on CPU
     from repro.kernels import ops
-    x = jnp.asarray(rng.normal(size=(1 << 20,)).astype(np.float32))
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(params["size"],)).astype(np.float32))
+    out = {"context": {"elements": params["size"]}}
     for bits in (8, 2):
         f = jax.jit(lambda v, b=bits: ops.quantize_dequantize(v, bits=b))
-        us = timeit(f, x)
-        gbps = x.size * 4 / (us / 1e6) / 1e9
-        out.append((f"kernel.quantize_roundtrip.{bits}bit.1M", us,
-                    f"{gbps:.2f}GB/s"))
-
-    # blockwise attention (the model hot path the Pallas kernel mirrors)
-    from repro.models.layers import blockwise_attention
-    q = jnp.asarray(rng.normal(size=(1, 1024, 8, 64)).astype(np.float32))
-    k = jnp.asarray(rng.normal(size=(1, 1024, 8, 64)).astype(np.float32))
-    v = jnp.asarray(rng.normal(size=(1, 1024, 8, 64)).astype(np.float32))
-    f = jax.jit(lambda a, b, c: blockwise_attention(
-        a, b, c, window=None, softcap=None, q_chunk=256))
-    us = timeit(f, q, k, v, n_iter=5)
-    flops = 2 * 2 * 1024 * 1024 // 2 * 8 * 64  # ~causal qk+pv
-    out.append(("kernel.blockwise_attention.1k", us,
-                f"{flops/(us/1e6)/1e9:.1f}GFLOP/s"))
-
-    # charlm train step (paper model)
-    from repro.configs import get_config
-    from repro.models import build
-    cfg = get_config("charlm-shakespeare")
-    model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    batch = {"tokens": jnp.zeros((32, 32), jnp.int32),
-             "targets": jnp.zeros((32, 32), jnp.int32)}
-    gf = jax.jit(lambda p, b: jax.value_and_grad(
-        model.train_loss, has_aux=True)(p, b)[0][0])
-    us = timeit(gf, params, batch, n_iter=5)
-    out.append(("charlm.grad_step.b32s32", us,
-                f"{32*32/(us/1e6):.0f}tok/s"))
+        stats = time_callable(f, x, repeats=params["repeats"])
+        out[f"roundtrip_{bits}bit_us"] = stats
+        out[f"bandwidth_{bits}bit_gb_s"] = (
+            x.size * 4 / (stats.median_us / 1e6) / 1e9)
     return out
 
 
-def main():
-    emit(rows())
+@benchmark(
+    "kernel.blockwise_attention", AREA,
+    metrics=[MetricSpec("forward_us", **_US),
+             MetricSpec("gflop_s", unit="GFLOP/s", **_THROUGHPUT)],
+    presets={"full": {"seq": 1024, "q_chunk": 256, "repeats": 5},
+             "smoke": {"seq": 512, "q_chunk": 128, "repeats": 5},
+             "tiny": {"seq": 128, "q_chunk": 64, "repeats": 2}},
+    description="blockwise attention forward, the model hot path the "
+                "Pallas kernel mirrors")
+def blockwise_attention_bench(params):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models.layers import blockwise_attention
+
+    seq, heads, head_dim = params["seq"], 8, 64
+    rng = np.random.default_rng(0)
+    q, k, v = (jnp.asarray(rng.normal(size=(1, seq, heads, head_dim))
+                           .astype(np.float32)) for _ in range(3))
+    f = jax.jit(lambda a, b, c: blockwise_attention(
+        a, b, c, window=None, softcap=None, q_chunk=params["q_chunk"]))
+    stats = time_callable(f, q, k, v, repeats=params["repeats"])
+    flops = 2 * 2 * seq * seq // 2 * heads * head_dim  # ~causal qk+pv
+    return {"forward_us": stats,
+            "gflop_s": flops / (stats.median_us / 1e6) / 1e9,
+            "context": {"shape": f"1x{seq}x{heads}x{head_dim}"}}
+
+
+@benchmark(
+    "charlm.grad_step", AREA,
+    metrics=[MetricSpec("grad_step_us", **_US),
+             MetricSpec("tokens_per_s", unit="tok/s", **_THROUGHPUT)],
+    presets={"full": {"batch": 32, "seq": 32, "repeats": 5},
+             "smoke": {"batch": 16, "seq": 32, "repeats": 5},
+             "tiny": {"batch": 4, "seq": 16, "repeats": 2}},
+    description="value_and_grad step of the paper's char-LM")
+def charlm_grad_step(params):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import build
+
+    cfg = get_config("charlm-shakespeare")
+    model = build(cfg)
+    p = model.init(jax.random.PRNGKey(0))
+    b, s = params["batch"], params["seq"]
+    batch = {"tokens": jnp.zeros((b, s), jnp.int32),
+             "targets": jnp.zeros((b, s), jnp.int32)}
+    gf = jax.jit(lambda pp, bb: jax.value_and_grad(
+        model.train_loss, has_aux=True)(pp, bb)[0][0])
+    stats = time_callable(gf, p, batch, repeats=params["repeats"])
+    return {"grad_step_us": stats,
+            "tokens_per_s": b * s / (stats.median_us / 1e6),
+            "context": {"batch": f"b{b}s{s}"}}
+
+
+def main(argv=None):
+    from benchmarks.common import emit_snapshot, run_area_cli
+    emit_snapshot(run_area_cli(AREA, argv))
 
 
 if __name__ == "__main__":

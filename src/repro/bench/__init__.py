@@ -1,0 +1,31 @@
+"""``repro.bench`` — the perf-trajectory regression harness.
+
+Perf claims live in committed ``BENCH_<area>.json`` baselines instead
+of commit messages: a declarative benchmark registry, a runner with
+warmup/repeat median+IQR statistics and an environment fingerprint, a
+typed record schema, and a direction-aware compare that fails on
+regressions beyond each metric's noise band (the CI ratchet).
+
+Benchmark definitions live next to the workloads in ``benchmarks/``;
+``python -m benchmarks.run --record / --check`` is the entry point.
+"""
+from repro.bench.compare import (FAILING, IMPROVEMENT, MISSING, NEW,
+                                 REGRESSION, WITHIN_NOISE, CompareReport,
+                                 MetricDiff, compare_metric,
+                                 compare_snapshots)
+from repro.bench.registry import (Benchmark, MetricSpec, all_benchmarks,
+                                  areas, benchmark, get, register)
+from repro.bench.runner import (TimingStats, run_area, run_benchmark,
+                                time_callable)
+from repro.bench.schema import (SCHEMA_VERSION, BenchmarkRecord, Fingerprint,
+                                MetricRecord, Snapshot, snapshot_filename)
+
+__all__ = [
+    "Benchmark", "MetricSpec", "register", "benchmark", "get",
+    "all_benchmarks", "areas",
+    "TimingStats", "time_callable", "run_benchmark", "run_area",
+    "SCHEMA_VERSION", "Fingerprint", "MetricRecord", "BenchmarkRecord",
+    "Snapshot", "snapshot_filename",
+    "CompareReport", "MetricDiff", "compare_metric", "compare_snapshots",
+    "REGRESSION", "IMPROVEMENT", "WITHIN_NOISE", "MISSING", "NEW", "FAILING",
+]

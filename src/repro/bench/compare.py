@@ -1,0 +1,170 @@
+"""Direction-aware snapshot comparison — the ratchet.
+
+``compare_snapshots(baseline, fresh)`` diffs every metric the baseline
+pins against the fresh run. A metric regresses when it moves in its
+*worse* direction (``lower``-is-better regresses upward, e.g.
+``rounds_to_target``; ``higher``-is-better regresses downward, e.g.
+``batched_speedup``) beyond its noise band
+``max(atol, rtol * |baseline|)``. Moves beyond the band in the better
+direction are improvements (reported, not failed — re-record to bank
+them); anything inside the band is within-noise.
+
+A baseline metric absent from the fresh run is a failure (a benchmark
+that stops reporting a ratcheted number has rotted); a fresh metric
+absent from the baseline is merely new. Fingerprint or scale
+mismatches are notes, not failures — timed metrics move across
+machines, which is what their generous tolerances are for.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.bench.compare BENCH_kernels.json fresh.json
+
+exits non-zero on any regression or missing metric.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.bench.schema import MetricRecord, Snapshot
+
+REGRESSION = "REGRESSION"
+IMPROVEMENT = "improvement"
+WITHIN_NOISE = "within-noise"
+MISSING = "MISSING"
+NEW = "new"
+
+#: Verdicts that fail the ratchet.
+FAILING = (REGRESSION, MISSING)
+
+
+@dataclass(frozen=True)
+class MetricDiff:
+    benchmark: str
+    metric: str
+    verdict: str
+    baseline: Optional[float] = None
+    fresh: Optional[float] = None
+    limit: Optional[float] = None   # worse-direction bound fresh had to hold
+    unit: str = ""
+
+    @property
+    def failed(self) -> bool:
+        return self.verdict in FAILING
+
+    def render(self) -> str:
+        if self.baseline is None or self.fresh is None:
+            return (f"  {self.verdict:12s} {self.benchmark}.{self.metric}")
+        delta = self.fresh - self.baseline
+        pct = (f" ({100.0 * delta / abs(self.baseline):+.1f}%)"
+               if self.baseline else "")
+        lim = f" limit={self.limit:.4g}" if self.limit is not None else ""
+        return (f"  {self.verdict:12s} {self.benchmark}.{self.metric}: "
+                f"{self.baseline:.4g} -> {self.fresh:.4g}{self.unit}"
+                f"{pct}{lim}")
+
+
+@dataclass
+class CompareReport:
+    area: str
+    diffs: List[MetricDiff] = field(default_factory=list)
+    notes: List[str] = field(default_factory=list)
+
+    @property
+    def regressions(self) -> List[MetricDiff]:
+        return [d for d in self.diffs if d.failed]
+
+    @property
+    def ok(self) -> bool:
+        return not self.regressions
+
+    def render(self) -> str:
+        lines = [f"[{self.area}] {len(self.diffs)} metrics vs baseline: "
+                 f"{len(self.regressions)} failing"]
+        lines += [f"  note: {n}" for n in self.notes]
+        order = {REGRESSION: 0, MISSING: 1, IMPROVEMENT: 2, NEW: 3,
+                 WITHIN_NOISE: 4}
+        for d in sorted(self.diffs, key=lambda d: (order[d.verdict],
+                                                   d.benchmark, d.metric)):
+            lines.append(d.render())
+        return "\n".join(lines)
+
+
+def compare_metric(base: MetricRecord, fresh: MetricRecord,
+                   tol_scale: float = 1.0) -> Tuple[str, float]:
+    """Verdict for one metric plus the worse-direction limit it had to
+    hold. Tolerances come from the *baseline* record — the committed
+    file is the contract — scaled by ``tol_scale``."""
+    band = max(base.atol, base.rtol * abs(base.value)) * tol_scale
+    if base.direction == "lower":
+        limit = base.value + band
+        if fresh.value > limit:
+            return REGRESSION, limit
+        if fresh.value < base.value - band:
+            return IMPROVEMENT, limit
+    else:
+        limit = base.value - band
+        if fresh.value < limit:
+            return REGRESSION, limit
+        if fresh.value > base.value + band:
+            return IMPROVEMENT, limit
+    return WITHIN_NOISE, limit
+
+
+def compare_snapshots(baseline: Snapshot, fresh: Snapshot,
+                      tol_scale: float = 1.0) -> CompareReport:
+    report = CompareReport(area=baseline.area)
+    if baseline.scale != fresh.scale:
+        report.notes.append(
+            f"scale mismatch: baseline @{baseline.scale}, fresh "
+            f"@{fresh.scale} — values are not comparable; re-record")
+    if baseline.fingerprint != fresh.fingerprint:
+        report.notes.append(
+            f"fingerprint differs (baseline {baseline.fingerprint.to_dict()} "
+            f"vs fresh {fresh.fingerprint.to_dict()}): timed metrics may "
+            f"shift; derived/simulated metrics must not")
+    for brec in baseline.records:
+        frec = fresh.record(brec.benchmark)
+        for bm in brec.metrics:
+            fm = frec.metric(bm.name) if frec else None
+            if fm is None:
+                report.diffs.append(MetricDiff(
+                    benchmark=brec.benchmark, metric=bm.name,
+                    verdict=MISSING, baseline=bm.value, unit=bm.unit))
+                continue
+            verdict, limit = compare_metric(bm, fm, tol_scale)
+            report.diffs.append(MetricDiff(
+                benchmark=brec.benchmark, metric=bm.name, verdict=verdict,
+                baseline=bm.value, fresh=fm.value, limit=limit,
+                unit=bm.unit))
+    for frec in fresh.records:
+        brec = baseline.record(frec.benchmark)
+        for fm in frec.metrics:
+            if brec is None or brec.metric(fm.name) is None:
+                report.diffs.append(MetricDiff(
+                    benchmark=frec.benchmark, metric=fm.name, verdict=NEW,
+                    fresh=fm.value, unit=fm.unit))
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Diff a fresh benchmark snapshot against a committed "
+                    "BENCH_<area>.json baseline; exit 1 on regressions.")
+    ap.add_argument("baseline", help="committed BENCH_<area>.json")
+    ap.add_argument("fresh", help="freshly recorded snapshot")
+    ap.add_argument("--tol-scale", type=float, default=1.0,
+                    help="multiply every noise band (e.g. 1.5 on a very "
+                         "different machine)")
+    args = ap.parse_args(argv)
+    report = compare_snapshots(Snapshot.load(args.baseline),
+                               Snapshot.load(args.fresh),
+                               tol_scale=args.tol_scale)
+    print(report.render())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,111 @@
+"""Declarative benchmark registry.
+
+A ``Benchmark`` is a record: a name, an area (one ``BENCH_<area>.json``
+snapshot per area), the metric specs it promises to produce (unit,
+better-direction, noise tolerance), scale presets (``smoke`` for CI,
+``full`` for local perf work, ``tiny`` for the test suite), and the
+function that runs it. Benchmark functions receive the chosen preset's
+parameter dict and return ``{metric_name: float | TimingStats}`` — the
+runner validates the returned keys against the declared specs, so a
+benchmark cannot silently drop a ratcheted metric.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+from repro.bench.schema import DIRECTIONS
+
+#: Scales every registered benchmark must provide a preset for.
+REQUIRED_SCALES = ("tiny", "smoke", "full")
+
+
+@dataclass(frozen=True)
+class MetricSpec:
+    """Declares one metric a benchmark produces.
+
+    ``rtol``/``atol`` set the ratchet's noise band (see
+    ``repro.bench.compare``). Timed wall-clock metrics should carry a
+    generous ``rtol`` — they move across machines — while derived and
+    simulated metrics (speedups, rounds-to-target, simulated seconds)
+    are deterministic given the seed and can be held tight.
+    """
+
+    name: str
+    unit: str
+    direction: str = "lower"
+    rtol: float = 0.25
+    atol: float = 0.0
+
+    def __post_init__(self):
+        if self.direction not in DIRECTIONS:
+            raise ValueError(f"direction must be one of {DIRECTIONS}, "
+                             f"got {self.direction!r}")
+
+
+@dataclass(frozen=True)
+class Benchmark:
+    """One registered benchmark."""
+
+    name: str
+    area: str
+    fn: Callable[[Mapping], Dict]
+    metrics: Tuple[MetricSpec, ...]
+    presets: Mapping[str, Mapping]
+    description: str = ""
+
+    def __post_init__(self):
+        names = [m.name for m in self.metrics]
+        if len(set(names)) != len(names):
+            raise ValueError(f"{self.name}: duplicate metric names {names}")
+        missing = [s for s in REQUIRED_SCALES if s not in self.presets]
+        if missing:
+            raise ValueError(f"{self.name}: missing presets {missing}")
+
+    def spec(self, metric: str) -> Optional[MetricSpec]:
+        for m in self.metrics:
+            if m.name == metric:
+                return m
+        return None
+
+
+_REGISTRY: Dict[str, Benchmark] = {}
+
+
+def register(bench: Benchmark) -> Benchmark:
+    """Add a benchmark to the global registry (idempotent re-register
+    of the same name replaces — module reimports must not error)."""
+    _REGISTRY[bench.name] = bench
+    return bench
+
+
+def benchmark(name: str, area: str, metrics, presets,
+              description: str = ""):
+    """Decorator form: ``@benchmark("fl.executor", "fl_engine", ...)``."""
+    def deco(fn):
+        register(Benchmark(name=name, area=area, fn=fn,
+                           metrics=tuple(metrics), presets=dict(presets),
+                           description=description))
+        return fn
+    return deco
+
+
+def get(name: str) -> Benchmark:
+    if name not in _REGISTRY:
+        raise KeyError(f"no benchmark named {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def all_benchmarks(area: Optional[str] = None) -> List[Benchmark]:
+    out = [b for b in _REGISTRY.values() if area is None or b.area == area]
+    return sorted(out, key=lambda b: (b.area, b.name))
+
+
+def areas() -> List[str]:
+    return sorted({b.area for b in _REGISTRY.values()})
+
+
+def clear() -> None:
+    """Reset the registry (tests only)."""
+    _REGISTRY.clear()

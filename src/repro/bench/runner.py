@@ -1,0 +1,104 @@
+"""Benchmark runner: warmup/repeat timing with median+IQR statistics,
+metric validation against the declared specs, and snapshot assembly
+with an environment fingerprint.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.bench.registry import Benchmark, all_benchmarks
+from repro.bench.schema import (BenchmarkRecord, Fingerprint, MetricRecord,
+                                Snapshot)
+
+
+@dataclass(frozen=True)
+class TimingStats:
+    """Median and interquartile range over post-warmup repeats, in
+    microseconds."""
+
+    median_us: float
+    iqr_us: float
+    n: int
+
+
+def time_callable(fn, *args, warmup: int = 2, repeats: int = 10,
+                  block=None) -> TimingStats:
+    """Time ``fn(*args)`` with warmup calls excluded.
+
+    ``block`` defaults to ``jax.block_until_ready`` so asynchronous
+    dispatch doesn't make kernels look free; pass ``block=False`` for
+    host-side functions.
+    """
+    if block is None:
+        import jax
+        block = jax.block_until_ready
+    elif block is False:
+        block = lambda x: x
+    for _ in range(max(0, warmup)):
+        block(fn(*args))
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        block(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    n = len(times)
+    median = times[n // 2] if n % 2 else 0.5 * (times[n // 2 - 1]
+                                                + times[n // 2])
+    iqr = times[(3 * n) // 4] - times[n // 4] if n >= 4 else 0.0
+    return TimingStats(median_us=median * 1e6, iqr_us=iqr * 1e6, n=n)
+
+
+def run_benchmark(bench: Benchmark, scale: str = "smoke",
+                  params: Optional[Dict] = None) -> BenchmarkRecord:
+    """Run one benchmark at a scale and type-check its output.
+
+    The function must return exactly the declared metric names — a
+    missing metric is an error (it would silently fall out of the
+    ratchet), as is an undeclared one (it would never be ratcheted).
+    Values may be plain numbers or ``TimingStats``. A ``"context"``
+    key, if returned, becomes the record's descriptive-string dict.
+    """
+    if params is None:
+        if scale not in bench.presets:
+            raise KeyError(f"{bench.name}: no preset for scale {scale!r} "
+                           f"(have {sorted(bench.presets)})")
+        params = dict(bench.presets[scale])
+    result = bench.fn(params)
+    context = {k: str(v) for k, v in result.pop("context", {}).items()}
+    declared = {m.name for m in bench.metrics}
+    got = set(result)
+    if got != declared:
+        raise ValueError(
+            f"{bench.name}: metric mismatch — missing "
+            f"{sorted(declared - got)}, undeclared {sorted(got - declared)}")
+    metrics = []
+    for spec in bench.metrics:
+        v = result[spec.name]
+        if isinstance(v, TimingStats):
+            value, n, iqr = v.median_us, v.n, v.iqr_us
+        else:
+            value, n, iqr = float(v), 1, 0.0
+        metrics.append(MetricRecord(name=spec.name, value=value,
+                                    unit=spec.unit, direction=spec.direction,
+                                    rtol=spec.rtol, atol=spec.atol,
+                                    n=n, iqr=iqr))
+    return BenchmarkRecord(benchmark=bench.name, scale=scale,
+                           metrics=tuple(metrics), context=context)
+
+
+def run_area(area: str, scale: str = "smoke", log=None) -> Snapshot:
+    """Run every registered benchmark in an area into one snapshot."""
+    benches = all_benchmarks(area)
+    if not benches:
+        raise KeyError(f"no benchmarks registered for area {area!r}")
+    records = []
+    for bench in benches:
+        if log:
+            log(f"[bench] {area}/{bench.name} @{scale} ...")
+        records.append(run_benchmark(bench, scale))
+    return Snapshot(area=area, scale=scale,
+                    fingerprint=Fingerprint.capture(),
+                    records=tuple(records))

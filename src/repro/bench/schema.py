@@ -1,0 +1,181 @@
+"""Typed records for the perf-trajectory harness.
+
+A benchmark run serializes to one ``BENCH_<area>.json`` snapshot per
+area: an environment fingerprint plus a list of per-benchmark records,
+each metric carrying its value, unit, better-direction and noise
+tolerance. The schema round-trips bit-for-bit through JSON
+(``tests/test_bench.py`` pins that), so committed baselines stay
+machine-readable across PRs — the whole point of the ratchet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, Mapping, Optional, Tuple
+
+SCHEMA_VERSION = 1
+
+#: Valid better-directions. ``lower`` regresses upward (times, rounds,
+#: simulated seconds); ``higher`` regresses downward (speedups,
+#: throughput).
+DIRECTIONS = ("lower", "higher")
+
+
+@dataclass(frozen=True)
+class Fingerprint:
+    """Where a snapshot was measured — recorded, never ratcheted.
+
+    Compare flags a mismatch as a note (timed metrics move across
+    machines; simulated/derived metrics must not), it does not fail on
+    one.
+    """
+
+    jax_version: str
+    backend: str
+    device_kind: str
+    cpu_count: int
+    python_version: str
+
+    @classmethod
+    def capture(cls) -> "Fingerprint":
+        import platform
+
+        import jax
+
+        return cls(jax_version=jax.__version__,
+                   backend=jax.default_backend(),
+                   device_kind=jax.devices()[0].device_kind,
+                   cpu_count=os.cpu_count() or 1,
+                   python_version=platform.python_version())
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Fingerprint":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+
+@dataclass(frozen=True)
+class MetricRecord:
+    """One measured metric: a typed number, not a formatted string.
+
+    ``rtol``/``atol`` define the noise band the ratchet tolerates: a
+    fresh value is a regression when it moves in the *worse* direction
+    by more than ``max(atol, rtol * |baseline|)``.  ``n``/``iqr``
+    carry repeat statistics for timed metrics (1/0.0 for derived
+    single-shot values).
+    """
+
+    name: str
+    value: float
+    unit: str
+    direction: str = "lower"
+    rtol: float = 0.25
+    atol: float = 0.0
+    n: int = 1
+    iqr: float = 0.0
+
+    def __post_init__(self):
+        if self.direction not in DIRECTIONS:
+            raise ValueError(f"direction must be one of {DIRECTIONS}, "
+                             f"got {self.direction!r}")
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "MetricRecord":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+
+@dataclass(frozen=True)
+class BenchmarkRecord:
+    """All metrics one registered benchmark produced at one scale.
+
+    ``context`` holds descriptive strings (cohort sizes, targets, knob
+    shapes) that used to live embedded in the CSV ``derived`` column —
+    kept for humans, never compared.
+    """
+
+    benchmark: str
+    scale: str
+    metrics: Tuple[MetricRecord, ...]
+    context: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def metric(self, name: str) -> Optional[MetricRecord]:
+        for m in self.metrics:
+            if m.name == name:
+                return m
+        return None
+
+    def to_dict(self) -> Dict:
+        return {"benchmark": self.benchmark, "scale": self.scale,
+                "metrics": [m.to_dict() for m in self.metrics],
+                "context": dict(self.context)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "BenchmarkRecord":
+        return cls(benchmark=d["benchmark"], scale=d["scale"],
+                   metrics=tuple(MetricRecord.from_dict(m)
+                                 for m in d["metrics"]),
+                   context=dict(d.get("context", {})))
+
+
+@dataclass(frozen=True)
+class Snapshot:
+    """One ``BENCH_<area>.json`` file: fingerprint + benchmark records."""
+
+    area: str
+    scale: str
+    fingerprint: Fingerprint
+    records: Tuple[BenchmarkRecord, ...]
+    schema_version: int = SCHEMA_VERSION
+
+    def record(self, benchmark: str) -> Optional[BenchmarkRecord]:
+        for r in self.records:
+            if r.benchmark == benchmark:
+                return r
+        return None
+
+    def to_dict(self) -> Dict:
+        return {"schema_version": self.schema_version, "area": self.area,
+                "scale": self.scale,
+                "fingerprint": self.fingerprint.to_dict(),
+                "records": [r.to_dict() for r in self.records]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Snapshot":
+        version = d.get("schema_version", 0)
+        if version > SCHEMA_VERSION:
+            raise ValueError(
+                f"snapshot schema v{version} is newer than this harness "
+                f"(v{SCHEMA_VERSION}) — update the code, don't guess")
+        return cls(area=d["area"], scale=d["scale"],
+                   fingerprint=Fingerprint.from_dict(d["fingerprint"]),
+                   records=tuple(BenchmarkRecord.from_dict(r)
+                                 for r in d["records"]),
+                   schema_version=version)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=False) + "\n"
+
+    @classmethod
+    def from_json(cls, text: str) -> "Snapshot":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "Snapshot":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def snapshot_filename(area: str) -> str:
+    """Canonical baseline filename for an area (``BENCH_<area>.json``)."""
+    return f"BENCH_{area}.json"

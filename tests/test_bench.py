@@ -1,0 +1,350 @@
+"""The perf-trajectory harness (`repro.bench` + `benchmarks/run.py`):
+schema round-trip, direction-aware compare verdicts, the ratchet's
+exit behavior on a synthetic regression, registry completeness, and a
+tiny-scale run of every registered benchmark (the `benchmarks/` tree's
+first test coverage)."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.bench import (FAILING, IMPROVEMENT, MISSING, NEW, REGRESSION,
+                         WITHIN_NOISE, Benchmark, BenchmarkRecord,
+                         Fingerprint, MetricRecord, MetricSpec, Snapshot,
+                         TimingStats, all_benchmarks, areas, compare_metric,
+                         compare_snapshots, run_benchmark, snapshot_filename,
+                         time_callable)
+from repro.bench import compare as compare_cli
+from repro.bench.schema import SCHEMA_VERSION
+
+FP = Fingerprint(jax_version="0.0.test", backend="cpu", device_kind="cpu",
+                 cpu_count=1, python_version="3.10.0")
+
+
+def mrec(name, value, direction="lower", rtol=0.1, atol=0.0, unit="us"):
+    return MetricRecord(name=name, value=value, unit=unit,
+                        direction=direction, rtol=rtol, atol=atol)
+
+
+def snap(metrics, area="test_area", scale="smoke", benchmark="b.one"):
+    return Snapshot(area=area, scale=scale, fingerprint=FP,
+                    records=(BenchmarkRecord(benchmark=benchmark, scale=scale,
+                                             metrics=tuple(metrics),
+                                             context={"note": "synthetic"}),))
+
+
+# ---------------------------------------------------------------- schema
+
+class TestSchema:
+    def test_round_trip(self):
+        s = snap([mrec("t_us", 123.4), mrec("speedup", 1.4,
+                                            direction="higher", unit="x")])
+        assert Snapshot.from_json(s.to_json()) == s
+
+    def test_json_is_typed_not_strings(self):
+        s = snap([mrec("speedup", 1.43, direction="higher", unit="x")])
+        d = json.loads(s.to_json())
+        m = d["records"][0]["metrics"][0]
+        assert m["value"] == 1.43 and isinstance(m["value"], float)
+        assert m["direction"] == "higher"
+        assert d["schema_version"] == SCHEMA_VERSION
+
+    def test_newer_schema_rejected(self):
+        d = json.loads(snap([mrec("t_us", 1.0)]).to_json())
+        d["schema_version"] = SCHEMA_VERSION + 1
+        with pytest.raises(ValueError, match="newer"):
+            Snapshot.from_dict(d)
+
+    def test_bad_direction_rejected(self):
+        with pytest.raises(ValueError, match="direction"):
+            mrec("t_us", 1.0, direction="sideways")
+        with pytest.raises(ValueError, match="direction"):
+            MetricSpec("t_us", unit="us", direction="sideways")
+
+    def test_save_load(self, tmp_path):
+        s = snap([mrec("t_us", 123.4)])
+        path = tmp_path / snapshot_filename("test_area")
+        s.save(str(path))
+        assert Snapshot.load(str(path)) == s
+
+    def test_lookups(self):
+        s = snap([mrec("t_us", 1.0)])
+        assert s.record("b.one").metric("t_us").value == 1.0
+        assert s.record("b.two") is None
+        assert s.record("b.one").metric("nope") is None
+
+
+# --------------------------------------------------------------- compare
+
+class TestCompareVerdicts:
+    def test_lower_is_better_regresses_upward(self):
+        base = mrec("rounds_to_target", 4.0, rtol=0.0, atol=1.0)
+        assert compare_metric(base, mrec("rounds_to_target", 6.0))[0] \
+            == REGRESSION
+        assert compare_metric(base, mrec("rounds_to_target", 5.0))[0] \
+            == WITHIN_NOISE
+        assert compare_metric(base, mrec("rounds_to_target", 2.0))[0] \
+            == IMPROVEMENT
+
+    def test_higher_is_better_regresses_downward(self):
+        base = mrec("batched_speedup", 1.4, direction="higher", rtol=0.25)
+        assert compare_metric(base, mrec("batched_speedup", 1.0))[0] \
+            == REGRESSION
+        assert compare_metric(base, mrec("batched_speedup", 1.3))[0] \
+            == WITHIN_NOISE
+        assert compare_metric(base, mrec("batched_speedup", 2.0))[0] \
+            == IMPROVEMENT
+
+    def test_band_is_max_of_atol_rtol(self):
+        base = mrec("du", 0.1, rtol=0.25, atol=1.0)   # atol dominates
+        assert compare_metric(base, mrec("du", 1.05))[0] == WITHIN_NOISE
+        assert compare_metric(base, mrec("du", 1.2))[0] == REGRESSION
+
+    def test_tol_scale_widens_band(self):
+        base = mrec("t_us", 100.0, rtol=0.1)
+        assert compare_metric(base, mrec("t_us", 115.0))[0] == REGRESSION
+        assert compare_metric(base, mrec("t_us", 115.0),
+                              tol_scale=2.0)[0] == WITHIN_NOISE
+
+    def test_missing_metric_fails_new_does_not(self):
+        base = snap([mrec("a_us", 1.0), mrec("b_us", 2.0)])
+        fresh = snap([mrec("a_us", 1.0), mrec("c_us", 3.0)])
+        report = compare_snapshots(base, fresh)
+        verdicts = {(d.metric): d.verdict for d in report.diffs}
+        assert verdicts["b_us"] == MISSING and MISSING in FAILING
+        assert verdicts["c_us"] == NEW and NEW not in FAILING
+        assert not report.ok
+
+    def test_identical_snapshots_ok(self):
+        s = snap([mrec("a_us", 1.0), mrec("s", 2.0, direction="higher")])
+        report = compare_snapshots(s, s)
+        assert report.ok and all(d.verdict == WITHIN_NOISE
+                                 for d in report.diffs)
+
+    def test_scale_and_fingerprint_mismatch_are_notes(self):
+        base = snap([mrec("a_us", 1.0)])
+        fresh = dataclasses.replace(
+            snap([mrec("a_us", 1.0)], scale="tiny"),
+            fingerprint=dataclasses.replace(FP, cpu_count=64))
+        report = compare_snapshots(base, fresh)
+        assert report.ok and len(report.notes) == 2
+
+    def test_render_mentions_regression(self):
+        base = snap([mrec("a_us", 100.0, rtol=0.1)])
+        report = compare_snapshots(base, snap([mrec("a_us", 200.0)]))
+        assert REGRESSION in report.render()
+
+
+class TestCompareCLI:
+    def test_synthetic_regression_exits_nonzero(self, tmp_path, capsys):
+        base = snap([mrec("speedup", 2.0, direction="higher", rtol=0.1,
+                          unit="x")])
+        fresh = snap([mrec("speedup", 1.0, direction="higher", unit="x")])
+        bp, fp_ = tmp_path / "base.json", tmp_path / "fresh.json"
+        base.save(str(bp))
+        fresh.save(str(fp_))
+        assert compare_cli.main([str(bp), str(fp_)]) == 1
+        assert REGRESSION in capsys.readouterr().out
+
+    def test_clean_compare_exits_zero(self, tmp_path):
+        s = snap([mrec("t_us", 5.0)])
+        p = tmp_path / "s.json"
+        s.save(str(p))
+        assert compare_cli.main([str(p), str(p)]) == 0
+
+
+# ------------------------------------------------------- run.py ratchet
+
+class TestRunCheck:
+    """`python -m benchmarks.run --check` semantics, on synthetic
+    snapshots (the real benchmarks are exercised at tiny scale below)."""
+
+    def test_regression_fails_check(self, tmp_path):
+        from benchmarks.run import check_areas
+        base = snap([mrec("rounds_to_target", 4.0, rtol=0.0, atol=1.0)])
+        base.save(str(tmp_path / snapshot_filename("test_area")))
+        fresh = snap([mrec("rounds_to_target", 7.0)])   # regressed upward
+        reports, ok = check_areas({"test_area": fresh}, str(tmp_path))
+        assert not ok and reports[0].regressions
+
+    def test_matching_passes_check(self, tmp_path):
+        from benchmarks.run import check_areas
+        s = snap([mrec("t_us", 5.0)])
+        s.save(str(tmp_path / snapshot_filename("test_area")))
+        reports, ok = check_areas({"test_area": s}, str(tmp_path))
+        assert ok and reports[0].ok
+
+    def test_missing_baseline_fails_check(self, tmp_path, capsys):
+        from benchmarks.run import check_areas
+        _, ok = check_areas({"test_area": snap([mrec("t_us", 1.0)])},
+                            str(tmp_path))
+        assert not ok
+        assert "--record" in capsys.readouterr().err
+
+
+class TestOnlySelection:
+    def test_unknown_name_errors(self):
+        from benchmarks.run import load_registry, select
+        load_registry()
+        with pytest.raises(SystemExit):
+            select("kernal")          # the silent-no-op bug, now an error
+
+    def test_prefixes_and_aliases(self):
+        from benchmarks.run import load_registry, select
+        load_registry()
+        mods, sel = select("table1,fig2")
+        assert mods == ["table1", "fig2_constraints"] and sel == []
+        mods, sel = select("kernel_bench")       # legacy module name
+        assert mods == [] and sel == ["kernels"]
+        mods, sel = select("fl.executor")        # benchmark name -> area
+        assert sel == ["fl_engine"]
+
+    def test_default_selects_everything(self):
+        from benchmarks.run import ANALYSIS_MODULES, load_registry, select
+        load_registry()
+        mods, sel = select(None)
+        assert mods == ANALYSIS_MODULES
+        assert set(sel) == {"fl_engine", "kernels"}
+
+
+# -------------------------------------------------------------- registry
+
+EXPECTED = {"fl_engine": {"fl.executor", "fl.dynamics", "fl.aggregator",
+                          "fl.wall_clock", "fl.controller"},
+            "kernels": {"kernel.quantize_roundtrip",
+                        "kernel.blockwise_attention", "charlm.grad_step"}}
+
+
+@pytest.fixture(scope="module")
+def registry():
+    from benchmarks.run import load_registry
+    load_registry()
+    return {a: all_benchmarks(a) for a in areas()}
+
+
+class TestRegistryCompleteness:
+    def test_expected_benchmarks_registered(self, registry):
+        assert set(registry) == set(EXPECTED)
+        for area, benches in registry.items():
+            assert {b.name for b in benches} == EXPECTED[area]
+
+    def test_every_benchmark_has_all_scales(self, registry):
+        for benches in registry.values():
+            for b in benches:
+                assert set(b.presets) >= {"tiny", "smoke", "full"}, b.name
+                assert b.metrics, b.name
+
+    def test_speedup_and_rounds_directions(self, registry):
+        """The ratchet's direction-awareness on the two metrics the
+        issue names: batched_speedup regresses downward,
+        rounds_to_target upward."""
+        by_name = {b.name: b for bs in registry.values() for b in bs}
+        assert by_name["fl.executor"].spec("batched_speedup").direction \
+            == "higher"
+        assert by_name["fl.aggregator"].spec(
+            "fedbuff_rounds_to_target").direction == "lower"
+
+    def test_duplicate_metric_names_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            Benchmark(name="b", area="a", fn=lambda p: {},
+                      metrics=(MetricSpec("m", unit="us"),
+                               MetricSpec("m", unit="us")),
+                      presets={"tiny": {}, "smoke": {}, "full": {}})
+
+    def test_missing_preset_rejected(self):
+        with pytest.raises(ValueError, match="presets"):
+            Benchmark(name="b", area="a", fn=lambda p: {},
+                      metrics=(MetricSpec("m", unit="us"),),
+                      presets={"smoke": {}})
+
+
+# ---------------------------------------------------------------- runner
+
+class TestRunner:
+    def test_time_callable_stats(self):
+        calls = []
+        stats = time_callable(lambda: calls.append(1), warmup=2, repeats=8,
+                              block=False)
+        assert len(calls) == 10 and stats.n == 8
+        assert stats.median_us >= 0 and stats.iqr_us >= 0
+
+    def test_metric_mismatch_rejected(self):
+        b = Benchmark(name="b", area="a",
+                      fn=lambda p: {"declared": 1.0, "undeclared": 2.0},
+                      metrics=(MetricSpec("declared", unit="us"),
+                               MetricSpec("absent", unit="us")),
+                      presets={"tiny": {}, "smoke": {}, "full": {}})
+        with pytest.raises(ValueError, match="metric mismatch"):
+            run_benchmark(b, "tiny")
+
+    def test_timing_stats_flow_into_record(self):
+        b = Benchmark(
+            name="b", area="a",
+            fn=lambda p: {"t_us": TimingStats(median_us=7.0, iqr_us=1.0,
+                                              n=5),
+                          "x": 2.0, "context": {"k": "v"}},
+            metrics=(MetricSpec("t_us", unit="us"),
+                     MetricSpec("x", unit="x", direction="higher")),
+            presets={"tiny": {}, "smoke": {}, "full": {}})
+        rec = run_benchmark(b, "tiny")
+        t = rec.metric("t_us")
+        assert (t.value, t.iqr, t.n) == (7.0, 1.0, 5)
+        assert rec.metric("x").n == 1 and rec.context == {"k": "v"}
+
+    def test_unknown_scale_rejected(self):
+        b = Benchmark(name="b", area="a", fn=lambda p: {},
+                      metrics=(MetricSpec("m", unit="us"),),
+                      presets={"tiny": {}, "smoke": {}, "full": {}})
+        with pytest.raises(KeyError, match="preset"):
+            run_benchmark(b, "galactic")
+
+
+# ------------------------------------------------------------ csv shim
+
+class TestEmitter:
+    def test_snapshot_rows_legacy_format(self):
+        from benchmarks.common import snapshot_rows
+        s = snap([mrec("t_us", 12.3), mrec("speedup", 1.4,
+                                           direction="higher", unit="x")])
+        rows = dict((name, (us, derived))
+                    for name, us, derived in snapshot_rows(s))
+        assert rows["b.one.t_us"][0] == 12.3            # us column filled
+        assert rows["b.one.speedup"][0] == 0.0          # derived metric
+        assert "1.4x" in rows["b.one.speedup"][1]
+        assert rows["b.one.note"] == (0.0, "synthetic")
+
+    def test_header_emitted_once(self, capsys):
+        import benchmarks.common as common
+        old = common._header_emitted
+        common._header_emitted = False
+        try:
+            common.emit([("a", 1.0, "x")])
+            common.emit([("b", 2.0, "y")])
+            out = capsys.readouterr().out
+        finally:
+            common._header_emitted = old
+        assert out.count(common.CSV_HEADER) == 1
+
+
+# ----------------------------------------------- tiny-scale real runs
+
+def _bench_ids():
+    from benchmarks.run import load_registry
+    load_registry()
+    return [b.name for b in all_benchmarks()]
+
+
+@pytest.mark.parametrize("name", _bench_ids())
+def test_tiny_scale_run(name):
+    """Every registered benchmark runs end-to-end at tiny scale and
+    produces exactly its declared, finite metrics."""
+    import math
+
+    from repro.bench import get
+    bench = get(name)
+    rec = run_benchmark(bench, "tiny")
+    assert rec.benchmark == name and rec.scale == "tiny"
+    assert {m.name for m in rec.metrics} == {m.name for m in bench.metrics}
+    for m in rec.metrics:
+        assert math.isfinite(m.value), (name, m.name)
+        assert m.n >= 1
