@@ -35,10 +35,11 @@ ANALYSIS_MODULES = ["table1", "fig2_constraints", "fig3_energy_temp",
                     "fig4_convergence", "roofline"]
 
 #: registry-bearing modules; importing them populates ``repro.bench``.
-REGISTRY_MODULES = ["kernel_bench", "fl_engine_bench"]
+REGISTRY_MODULES = ["kernel_bench", "fl_engine_bench", "wire_bench"]
 
 #: old ``--only`` spellings for the ported modules keep working.
-LEGACY_ALIASES = {"kernel_bench": "kernels", "fl_engine_bench": "fl_engine"}
+LEGACY_ALIASES = {"kernel_bench": "kernels", "fl_engine_bench": "fl_engine",
+                  "wire_bench": "wire"}
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -1,0 +1,107 @@
+"""Wire-path benchmarks: fused quantize + top-k sparsify and the
+fixed-point masked-sum cohort fold — registered on the ``repro.bench``
+harness (area ``wire``) so their timings, throughputs, and the wire
+compression ratio are typed, snapshotted to ``BENCH_wire.json``, and
+ratcheted by ``python -m benchmarks.run --check``.
+
+    PYTHONPATH=src:. python benchmarks/wire_bench.py [--scale smoke|full|tiny]
+
+The masked-sum rows pin the point of the kernel path: the fused
+one-pass fold over the stacked cohort (``ops.masked_sum_u64``; the
+Pallas limb kernel on TPU, a single vectorized pass on CPU) beats the
+per-arrival sequential accumulation ``MaskedSumAggregator`` previously
+ran — ``fused_speedup`` ratchets that win. The sparse-wire row
+ratchets the *bytes* win (deterministic, tight band): top-k ships a
+fraction of the dense tuple.
+"""
+from __future__ import annotations
+
+from repro.bench import MetricSpec, benchmark, time_callable
+
+AREA = "wire"
+
+_US = dict(unit="us", direction="lower", rtol=1.0)
+_THROUGHPUT = dict(direction="higher", rtol=0.5)
+
+
+@benchmark(
+    "wire.quantize_topk", AREA,
+    metrics=[MetricSpec("dense_roundtrip_us", **_US),
+             MetricSpec("topk_roundtrip_us", **_US),
+             MetricSpec("wire_in_gb_s", unit="GB/s", **_THROUGHPUT),
+             MetricSpec("sparse_wire_reduction", unit="x",
+                        direction="higher", rtol=0.05)],
+    presets={"full": {"size": 1 << 20, "topk": 32, "repeats": 10},
+             "smoke": {"size": 1 << 18, "topk": 32, "repeats": 15},
+             "tiny": {"size": 1 << 14, "topk": 32, "repeats": 3}},
+    description="fused quantize + per-block top-k sparsify round-trip "
+                "and the dense->sparse wire-bytes ratio")
+def quantize_topk(params):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import compression
+    from repro.kernels import ops
+
+    size, k = params["size"], params["topk"]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(size,)).astype(np.float32))
+    dense = jax.jit(lambda v: ops.quantize_dequantize(v, bits=8))
+    sparse = jax.jit(lambda v: ops.quantize_dequantize(v, bits=8, topk=k))
+    t_dense = time_callable(dense, x, repeats=params["repeats"])
+    t_topk = time_callable(sparse, x, repeats=params["repeats"])
+    reduction = (compression.wire_bytes(x, 1)
+                 / compression.wire_bytes(x, 1, topk=k))
+    return {"dense_roundtrip_us": t_dense,
+            "topk_roundtrip_us": t_topk,
+            "wire_in_gb_s": size * 4 / (t_dense.median_us / 1e6) / 1e9,
+            "sparse_wire_reduction": reduction,
+            "context": {"elements": size, "topk": f"{k}/256"}}
+
+
+@benchmark(
+    "wire.masked_sum", AREA,
+    metrics=[MetricSpec("cohort_seq_us", **_US),
+             MetricSpec("cohort_fused_us", **_US),
+             MetricSpec("fused_speedup", unit="x", **_THROUGHPUT),
+             MetricSpec("agg_gb_s", unit="GB/s", **_THROUGHPUT)],
+    presets={"full": {"clients": 64, "size": 1 << 20, "repeats": 7},
+             "smoke": {"clients": 32, "size": 1 << 17, "repeats": 7},
+             "tiny": {"clients": 4, "size": 1 << 13, "repeats": 3}},
+    description="secagg cohort fold: per-arrival sequential uint64 "
+                "accumulation vs the fused one-pass masked-sum kernel path")
+def masked_sum(params):
+    import numpy as np
+
+    from repro.kernels import ops
+
+    c, n = params["clients"], params["size"]
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 2 ** 64, size=(c, n), dtype=np.uint64)
+
+    def sequential():
+        # the aggregator's old inner loop: one modular add per arrival
+        total = vals[0]
+        for i in range(1, c):
+            total = total + vals[i]
+        return total
+
+    t_seq = time_callable(sequential, repeats=params["repeats"], block=False)
+    t_fused = time_callable(ops.masked_sum_u64, vals,
+                            repeats=params["repeats"], block=False)
+    assert np.array_equal(ops.masked_sum_u64(vals), sequential())
+    return {"cohort_seq_us": t_seq,
+            "cohort_fused_us": t_fused,
+            "fused_speedup": t_seq.median_us / t_fused.median_us,
+            "agg_gb_s": c * n * 8 / (t_fused.median_us / 1e6) / 1e9,
+            "context": {"cohort": f"{c}x{n}"}}
+
+
+def main(argv=None):
+    from benchmarks.common import emit_snapshot, run_area_cli
+    emit_snapshot(run_area_cli(AREA, argv))
+
+
+if __name__ == "__main__":
+    main()

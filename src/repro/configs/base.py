@@ -202,6 +202,10 @@ class FLConfig:
     # ("" = plain averaging; "adam" / "momentum" = FedAdam / FedAvgM)
     server_opt: str = ""
     server_lr: float = 0.1
+    # sparse wire format: keep only the k largest-magnitude codes per
+    # 256-value quantization block (None = dense; only active at q > 0).
+    # Extra knob surface for the wire_mb constraint.
+    wire_topk: Any = None
     # --- constraint stack (repro.constraints), CAFLL strategies only ---
     # which resources are budgeted: "paper" (the four Appendix-A.1
     # proxies) | "paper+wire_mb" style registry specs | a sequence of

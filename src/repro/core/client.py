@@ -119,12 +119,13 @@ class ClientRunner:
                                          grads_sum)
             w, opt_state = self._apply(w, opt_state, grads_sum, mask)
 
-        delta = finalize_delta(w, params, mask, knobs.q)
+        topk = self.fl.wire_topk
+        delta = finalize_delta(w, params, mask, knobs.q, topk=topk)
         train_loss = float(jnp.mean(jnp.stack(losses)))   # one sync/client
         return ClientResult(
             client_id=client_id, delta=delta, params_active=active,
             train_loss=train_loss,
-            wire_mb_actual=_masked_wire_mb(delta, mask, knobs.q))
+            wire_mb_actual=_masked_wire_mb(delta, mask, knobs.q, topk=topk))
 
     def local_train(self, client_id: int, params, knobs: Knobs
                     ) -> Tuple[dict, Dict[str, float], Dict[str, float]]:
@@ -144,24 +145,30 @@ class ClientRunner:
         return r.delta, usage, metrics
 
 
-def finalize_delta(w, params, mask, q: int):
+def finalize_delta(w, params, mask, q: int, topk=None):
     """Client update as shipped: fp32 difference, wire-compressed
-    (q knob; the server immediately dequantizes), frozen leaves exact
-    zeros either way."""
+    (q knob, optional top-k sparsification; the server immediately
+    dequantizes), frozen leaves exact zeros either way."""
     delta = jax.tree.map(lambda a, b_: a.astype(jnp.float32)
                          - b_.astype(jnp.float32), w, params)
-    delta = compression.compress_decompress(delta, q)
+    delta = compression.compress_decompress(delta, q, topk=topk)
     return freezing.apply_mask(delta, mask)
 
 
-def _masked_wire_mb(delta, mask, q: int) -> float:
-    """Actual bytes: only trainable leaves ship."""
+def _masked_wire_mb(delta, mask, q: int, topk=None) -> float:
+    """Actual bytes: only trainable leaves ship (continuous in the
+    masked fraction; the per-block formulas mirror compression.wire_bytes)."""
     total = 0.0
     for leaf, m in zip(jax.tree.leaves(delta), jax.tree.leaves(mask)):
         m_arr = np.asarray(m)
         frac = float(np.mean(m_arr)) if m_arr.ndim else float(m_arr)
         n = frac * np.prod(leaf.shape)
-        total += n * BYTES_PER_PARAM[q]
-        if q > 0:
-            total += 4.0 * (n / 256.0)
+        if q == 0 or topk is None or topk >= 256:
+            total += n * BYTES_PER_PARAM[q]
+            if q > 0:
+                total += 4.0 * (n / 256.0)
+        else:
+            bits = 8 if q == 1 else 2
+            blocks = n / 256.0
+            total += blocks * (topk * bits / 8.0 + 256.0 / 8.0 + 4.0)
     return total / 1e6

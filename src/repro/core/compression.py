@@ -4,15 +4,21 @@ q=0: fp32 (4 B/param) — no-op.
 q=1: blockwise int8 absmax quantization (1 B/param + fp32 scale / block).
 q=2: blockwise 2-bit quantization (0.25 B/param + fp32 scale / block).
 
+``topk`` adds the sparse wire format on top of either quantized level:
+only the ``topk`` largest-magnitude codes per block ship, as
+(packed codes, 1-bit/coordinate keep-bitmask, per-block fp32 scale) —
+the knob surface the Constraint API's ``wire_mb`` constraint steers.
+
 The FL loop calls ``compress_decompress`` (the server immediately
 dequantizes, so we model the *wire* format and keep the math in fp32).
-On TPU the quantizer is the Pallas kernel in ``repro.kernels.quantize``;
-on CPU (this container, and inside the FL simulation loop) the pure-jnp
-reference path is used — ``repro.kernels.ops`` picks the backend.
+On TPU the quantize/top-k path is the fused Pallas kernel in
+``repro.kernels.wire``; on CPU (this container, and inside the FL
+simulation loop) the pure-jnp reference path is used —
+``repro.kernels.ops`` picks the backend.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
@@ -20,35 +26,52 @@ import numpy as np
 from repro.core.resources import BYTES_PER_PARAM
 
 
-def compress_decompress(tree: Any, q: int, block: int = 256) -> Any:
+def compress_decompress(tree: Any, q: int, block: int = 256,
+                        topk: Optional[int] = None) -> Any:
     if q == 0:
         return tree
     from repro.kernels import ops
     bits = 8 if q == 1 else 2
-    return jax.tree.map(lambda l: ops.quantize_dequantize(l, bits=bits,
-                                                          block=block), tree)
+    return jax.tree.map(
+        lambda l: ops.quantize_dequantize(l, bits=bits, block=block,
+                                          topk=topk), tree)
 
 
-def wire_bytes(tree: Any, q: int, block: int = 256) -> float:
-    """Actual bytes on the wire, including per-block scales."""
-    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
-    payload = n * BYTES_PER_PARAM[q]
+def wire_bytes(tree: Any, q: int, block: int = 256,
+               topk: Optional[int] = None) -> float:
+    """Exact bytes of the shipped wire tuple.
+
+    Matches ``kernels.ops.quantize_wire`` output leaf by leaf: each
+    leaf ships ``ceil(n / block)`` blocks (the tail block is padded
+    within itself; no ``ROWS_PER_TILE`` pad blocks — the kernel path
+    strips those before return). Dense format: ``block`` codes at
+    bits/8 B each + one fp32 scale per block. Top-k format: ``topk``
+    packed codes + a 1-bit/coordinate keep-bitmask + the scale.
+    """
+    leaves = jax.tree.leaves(tree)
+    n = sum(int(np.prod(l.shape)) for l in leaves)
     if q == 0:
-        return payload
-    n_blocks = sum(-(-int(np.prod(l.shape)) // block)
-                   for l in jax.tree.leaves(tree))
-    return payload + 4.0 * n_blocks
+        return n * BYTES_PER_PARAM[0]
+    bits = 8 if q == 1 else 2
+    n_blocks = sum(-(-int(np.prod(l.shape)) // block) for l in leaves)
+    if topk is not None and topk < block:
+        codes = n_blocks * (topk * bits / 8.0 + block / 8.0)
+    else:
+        codes = n_blocks * block * bits / 8.0
+    return codes + 4.0 * n_blocks
 
 
-def wire_mb(tree: Any, q: int, block: int = 256) -> float:
-    return wire_bytes(tree, q, block) / 1e6
+def wire_mb(tree: Any, q: int, block: int = 256,
+            topk: Optional[int] = None) -> float:
+    return wire_bytes(tree, q, block, topk) / 1e6
 
 
-def compression_error(tree: Any, q: int, block: int = 256) -> Dict[str, float]:
+def compression_error(tree: Any, q: int, block: int = 256,
+                      topk: Optional[int] = None) -> Dict[str, float]:
     """Relative L2 error introduced by the wire format (diagnostics)."""
     if q == 0:
         return {"rel_l2": 0.0}
-    deq = compress_decompress(tree, q, block)
+    deq = compress_decompress(tree, q, block, topk)
     num = 0.0
     den = 0.0
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(deq)):

@@ -377,30 +377,43 @@ class MaskedSumAggregator(Aggregator):
     every other aggregator defaults to, so swapping ``"sync"`` for
     ``"masked"`` changes only *how securely*, not *what* is computed;
     ``use_weights=True`` gives the |D_i|-weighted variant.
+
+    ``path`` picks the cohort-fold backend: ``"kernel"`` (default)
+    buffers each client's masked uint64 vector and folds the stacked
+    cohort through ``repro.kernels.ops.masked_sum`` (the Pallas
+    fixed-point masked-sum kernel — one bandwidth-bound pass) at
+    flush; ``"numpy"`` keeps the sequential per-arrival uint64
+    accumulation as the exactness oracle. Modular sums are
+    associative, so the two paths are bit-identical under every
+    dropout combination.
     """
 
     name = "masked"
 
     def __init__(self, scale_bits: int = 32, use_weights: bool = False,
-                 seed: int = 0):
+                 seed: int = 0, path: str = "kernel"):
         super().__init__()
         # the *weighted* fixed-point values must fit int64 with headroom
         # for the cohort sum; _quantize guards this at runtime, since
         # the bound depends on the weights (shard sizes) actually seen
         assert 1 <= scale_bits <= 52
+        assert path in ("kernel", "numpy"), path
         self.scale = float(2 ** scale_bits)
         self.use_weights = use_weights
         self.seed = seed
+        self.path = path
         self._round = 0
         self._cohort: List[int] = []
         self._reporters: List[ClientReport] = []
         self._sum: Optional[List[np.ndarray]] = None
+        self._pending: List[List[np.ndarray]] = []
         self._treedef = None
         self._reconstructed = 0
 
     def reset(self, combine):
         super().reset(combine)
         self._cohort, self._reporters, self._sum = [], [], None
+        self._pending = []
         self._reconstructed = 0
 
     def begin_round(self, rnd, cohort):
@@ -408,6 +421,7 @@ class MaskedSumAggregator(Aggregator):
         self._cohort = [ci.client_id for ci in cohort]
         self._reporters = []
         self._sum = None
+        self._pending = []
         self._treedef = None
 
     # -- fixed-point + masks -------------------------------------------------
@@ -456,17 +470,36 @@ class MaskedSumAggregator(Aggregator):
         for partner in self._cohort:
             if partner != me:
                 vec = self._add_masks(vec, me, partner, sign=+1)
-        if self._sum is None:
+        if self.path == "kernel":
+            # buffer the masked vector; the cohort folds in one kernel
+            # pass at flush instead of C sequential accumulations
+            self._pending.append(vec)
+            self._treedef = treedef
+        elif self._sum is None:
             self._sum, self._treedef = vec, treedef
         else:
             self._sum = [a + b for a, b in zip(self._sum, vec)]
         self._reporters.append(report)
         return None
 
+    def _kernel_fold(self) -> List[np.ndarray]:
+        """Fold the buffered cohort mod 2^64 via the masked-sum kernel."""
+        from repro.kernels import ops
+        shapes = [v.shape for v in self._pending[0]]
+        sizes = [v.size for v in self._pending[0]]
+        stacked = np.stack([np.concatenate([l.reshape(-1) for l in vec])
+                            for vec in self._pending])
+        tot = ops.masked_sum_u64(stacked)
+        out, off = [], 0
+        for shape, size in zip(shapes, sizes):
+            out.append(tot[off:off + size].reshape(shape))
+            off += size
+        return out
+
     def flush(self, rnd):
         if not self._reporters:
             return None
-        total = self._sum
+        total = self._kernel_fold() if self.path == "kernel" else self._sum
         reported = {r.client.client_id for r in self._reporters}
         for dropped in (c for c in self._cohort if c not in reported):
             # mask recovery: remove the masks reporters shared with the
@@ -481,14 +514,14 @@ class MaskedSumAggregator(Aggregator):
             for x in total]
         mean = jax.tree.unflatten(self._treedef, leaves)
         reports = tuple(self._reporters)
-        self._reporters, self._sum = [], None
+        self._reporters, self._sum, self._pending = [], None, []
         # the masked protocol fixes the combination to a weighted mean;
         # hand it through combine as one delta so ServerOpt composes
         return self._emit(rnd, reports, self._combine([mean], [1.0]))
 
     def state_snapshot(self):
         return {**super().state_snapshot(), "cohort": len(self._cohort),
-                "pending": len(self._reporters),
+                "pending": len(self._reporters), "path": self.path,
                 "masks_reconstructed": self._reconstructed}
 
 

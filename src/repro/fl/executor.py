@@ -122,21 +122,23 @@ class BatchedExecutor(ClientExecutor):
             batches = self._stack_batches(cids, kn)
             deltas, losses = self._batched(params, mask, batches)
             losses = np.asarray(losses)
+            topk = self.runner.fl.wire_topk
             for row, i in enumerate(idxs):
                 raw = jax.tree.map(lambda l, r=row: l[r], deltas)
-                delta = _compress(raw, mask, kn.q)
+                delta = _compress(raw, mask, kn.q, topk=topk)
                 results[i] = ClientResult(
                     client_id=cids[row], delta=delta, params_active=active,
                     train_loss=float(losses[row]),
-                    wire_mb_actual=_masked_wire_mb(delta, mask, kn.q))
+                    wire_mb_actual=_masked_wire_mb(delta, mask, kn.q,
+                                                   topk=topk))
         return results
 
 
-def _compress(raw_delta, mask, q: int):
+def _compress(raw_delta, mask, q: int, topk=None):
     """Wire-compress an already-computed fp32 delta (the batched path
-    computes w - params on device; only the q knob remains)."""
+    computes w - params on device; only the q/topk knobs remain)."""
     from repro.core import compression, freezing
-    delta = compression.compress_decompress(raw_delta, q)
+    delta = compression.compress_decompress(raw_delta, q, topk=topk)
     return freezing.apply_mask(delta, mask)
 
 

@@ -12,9 +12,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels import quantize as qk
+from repro.kernels import wire as wk
 from repro.kernels import flash_attention as fak
 
 FORCE_BACKEND: Optional[str] = None   # None | "pallas" | "ref"
@@ -33,15 +35,20 @@ def _use_pallas() -> bool:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "block"))
-def _qdq_ref(x, bits: int, block: int):
-    return ref.quantize_dequantize_ref(x, bits, block)
+@functools.partial(jax.jit, static_argnames=("bits", "block", "topk"))
+def _qdq_ref(x, bits: int, block: int, topk):
+    return ref.quantize_dequantize_ref(x, bits, block, topk=topk)
 
 
-def quantize_dequantize(x, *, bits: int, block: int = 256):
-    """Wire round-trip (quantize then dequantize), any shape."""
+def quantize_dequantize(x, *, bits: int, block: int = 256,
+                        topk: Optional[int] = None):
+    """Wire round-trip (quantize then dequantize), any shape.
+
+    ``topk`` keeps only the k largest-magnitude codes per block (the
+    sparse wire format); dropped coordinates round-trip to exactly 0.0.
+    """
     if not _use_pallas():
-        return _qdq_ref(x, bits, block)
+        return _qdq_ref(x, bits, block, topk)
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1).astype(jnp.float32)
     n = flat.shape[0]
@@ -50,25 +57,131 @@ def quantize_dequantize(x, *, bits: int, block: int = 256):
         flat = jnp.pad(flat, (0, pad))
     blocks = flat.reshape(-1, block)
     interp = jax.default_backend() != "tpu"
-    codes, scales = qk.quantize_blocks(blocks, bits, interpret=interp)
+    if topk is not None and topk < block:
+        codes, scales, _ = wk.quantize_topk_blocks(blocks, bits, topk,
+                                                   interpret=interp)
+    else:
+        codes, scales = qk.quantize_blocks(blocks, bits, interpret=interp)
     deq = qk.dequantize_blocks(codes, scales, interpret=interp)
     return deq.reshape(-1)[:n].reshape(shape).astype(dtype)
 
 
-def quantize_wire(x, *, bits: int, block: int = 256):
-    """-> (codes int8 (n_blocks, block), scales f32 (n_blocks,), n_valid)."""
+@functools.partial(jax.jit, static_argnames=("bits", "topk"))
+def _quantize_wire_ref(blocks, bits: int, topk):
+    if topk is not None:
+        return ref.quantize_topk_blocks_ref(blocks, bits, topk)
+    codes, scales = ref.quantize_blocks_ref(blocks, bits)
+    return codes, scales, None
+
+
+def quantize_wire(x, *, bits: int, block: int = 256,
+                  topk: Optional[int] = None):
+    """Quantize a tensor into the wire tuple actually shipped.
+
+    -> ``(codes int8 (n_blocks, block), scales f32 (n_blocks,),
+    mask int8 (n_blocks, block) | None, n_valid)`` with exactly
+    ``n_blocks = ceil(n / block)`` on every backend: the Pallas path
+    pads to ``block * ROWS_PER_TILE`` tiles internally but the pad
+    blocks are stripped before return, so ``core.compression.wire_bytes``
+    and the tuple's nbytes agree. ``mask`` is None for the dense format.
+    """
     flat = x.reshape(-1).astype(jnp.float32)
     n = flat.shape[0]
-    pad = (-n) % (block * qk.ROWS_PER_TILE)
+    n_blocks = -(-n // block) if n else 0
+    if n == 0:
+        return (jnp.zeros((0, block), jnp.int8), jnp.zeros((0,), jnp.float32),
+                None if topk is None or topk >= block else
+                jnp.zeros((0, block), jnp.int8), 0)
+    if topk is not None and topk >= block:
+        topk = None
+    if _use_pallas():
+        pad = (-n) % (block * qk.ROWS_PER_TILE)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        blocks = flat.reshape(-1, block)
+        interp = jax.default_backend() != "tpu"
+        if topk is not None:
+            codes, scales, mask = wk.quantize_topk_blocks(blocks, bits, topk,
+                                                          interpret=interp)
+            return (codes[:n_blocks], scales[:n_blocks], mask[:n_blocks], n)
+        codes, scales = qk.quantize_blocks(blocks, bits, interpret=interp)
+        return codes[:n_blocks], scales[:n_blocks], None, n
+    pad = (-n) % block
     if pad:
         flat = jnp.pad(flat, (0, pad))
     blocks = flat.reshape(-1, block)
-    if _use_pallas():
-        interp = jax.default_backend() != "tpu"
-        codes, scales = qk.quantize_blocks(blocks, bits, interpret=interp)
-    else:
-        codes, scales = ref.quantize_blocks_ref(blocks, bits)
-    return codes, scales, n
+    codes, scales, mask = _quantize_wire_ref(blocks, bits, topk)
+    return codes, scales, mask, n
+
+
+# ---------------------------------------------------------------------------
+# fixed-point masked sum (secure-aggregation cohort fold)
+# ---------------------------------------------------------------------------
+
+MASKED_SUM_MAX_CLIENTS = ref.MASKED_SUM_MAX_CLIENTS
+
+
+def split_limbs(u64: np.ndarray):
+    """NumPy uint64 (C, n) -> ((C, n) hi, (C, n) lo) uint32 limb pairs."""
+    u64 = np.ascontiguousarray(u64, dtype=np.uint64)
+    return ((u64 >> np.uint64(32)).astype(np.uint32),
+            (u64 & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+
+
+def merge_limbs(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    """(hi, lo) uint32 -> NumPy uint64, elementwise."""
+    return ((np.asarray(hi, dtype=np.uint64) << np.uint64(32))
+            | np.asarray(lo, dtype=np.uint64))
+
+
+_masked_sum_ref_jit = jax.jit(ref.masked_sum_ref)
+
+
+def masked_sum(hi, lo):
+    """Sum C clients' uint64 vectors mod 2^64, carried as uint32 limbs.
+
+    hi/lo: (C, n) uint32 -> ((n,) hi, (n,) lo) uint32. Bit-exact on
+    every backend (modular sums are associative); the Pallas kernel
+    does it in one bandwidth-bound pass over the stacked cohort.
+    """
+    hi = jnp.asarray(hi, dtype=jnp.uint32)
+    lo = jnp.asarray(lo, dtype=jnp.uint32)
+    c, n = hi.shape
+    if c > MASKED_SUM_MAX_CLIENTS:
+        raise ValueError(
+            f"masked_sum supports at most {MASKED_SUM_MAX_CLIENTS} clients "
+            f"per fold, got {c}")
+    if not _use_pallas():
+        return _masked_sum_ref_jit(hi, lo)
+    pad = (-n) % wk.LIMB_TILE
+    if pad:
+        hi = jnp.pad(hi, ((0, 0), (0, pad)))
+        lo = jnp.pad(lo, ((0, 0), (0, pad)))
+    interp = jax.default_backend() != "tpu"
+    hi_s, lo_s = wk.masked_sum_limbs(hi, lo, interpret=interp)
+    return hi_s[:n], lo_s[:n]
+
+
+def masked_sum_u64(vals: np.ndarray) -> np.ndarray:
+    """Host-level cohort fold: (C, n) uint64 -> (n,) sum mod 2^64.
+
+    The ``MaskedSumAggregator`` flush path. One fused pass over the
+    stacked cohort on every backend: the Pallas limb kernel on TPU,
+    a single NumPy ``add.reduce`` (uint64 wraps mod 2^64 natively) on
+    CPU where 32-bit limb emulation can't win. ``FORCE_BACKEND``
+    pins the limb paths for bit-compat validation.
+    """
+    vals = np.ascontiguousarray(vals, dtype=np.uint64)
+    c = vals.shape[0]
+    if c > MASKED_SUM_MAX_CLIENTS:
+        raise ValueError(
+            f"masked_sum supports at most {MASKED_SUM_MAX_CLIENTS} clients "
+            f"per fold, got {c}")
+    if FORCE_BACKEND is None and jax.default_backend() != "tpu":
+        return np.add.reduce(vals, axis=0)
+    hi, lo = split_limbs(vals)
+    hi_s, lo_s = masked_sum(hi, lo)
+    return merge_limbs(np.asarray(hi_s), np.asarray(lo_s))
 
 
 # ---------------------------------------------------------------------------

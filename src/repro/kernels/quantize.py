@@ -2,7 +2,9 @@
 hot spot (every round quantizes the full update tree at q>0).
 
 Wire format: 1-D blocks of ``block`` values; per-block fp32 absmax scale;
-mid-rise codes (see kernels/ref.py). Tiling: ROWS_PER_TILE blocks x block
+zero-preserving mid-tread codes (see kernels/ref.py — code 0 dequantizes
+to exactly 0.0, which the top-k sparse wire format in kernels/wire.py
+relies on). Tiling: ROWS_PER_TILE blocks x block
 values per kernel invocation — (8, 256) fp32 = 8 KiB in VMEM, lane-dim
 256 is a multiple of 128 so loads/stores are register-aligned; the
 reduction (absmax) runs along the minor axis on the VPU.
@@ -25,18 +27,20 @@ def _quantize_kernel(x_ref, codes_ref, scales_ref, *, bits: int):
     x = x_ref[...].astype(jnp.float32)                    # (ROWS, block)
     L = 2 ** (bits - 1)
     absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)   # (ROWS, 1)
-    scale = absmax / L
+    # reciprocal multiply, not division: bit-identical to the ref twin
+    # (see ref.quantize_blocks_ref)
+    scale = absmax * jnp.float32(1.0 / (L - 1))
     safe = jnp.where(scale > 0, scale, 1.0)
-    codes = jnp.clip(jnp.floor(x / safe), -L, L - 1)
+    # mid-tread: rint keeps exact zeros at code 0 (zero-preserving)
+    codes = jnp.clip(jnp.rint(x / safe), -(L - 1), L - 1)
     codes_ref[...] = codes.astype(jnp.int8)
     scales_ref[...] = scale[:, 0]
 
 
 def _dequantize_kernel(codes_ref, scales_ref, out_ref):
     codes = codes_ref[...].astype(jnp.float32)
-    scale = scales_ref[...][:, None]
-    out = (codes + 0.5) * scale
-    out_ref[...] = jnp.where(scale > 0, out, 0.0)
+    # code 0 -> exactly 0.0; all-zero blocks (scale 0) stay zero for free
+    out_ref[...] = codes * scales_ref[...][:, None]
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))

@@ -1,0 +1,146 @@
+"""Pallas-TPU wire-path kernels — the CAFL-L communication hot path
+fused end to end: quantize -> per-block top-k sparsify -> fixed-point
+masked sum -> dequantize.
+
+Three kernels (each with a pure-jnp twin in ``kernels/ref.py`` and
+backend dispatch in ``kernels/ops.py``):
+
+``quantize_topk_blocks``
+    Fused blockwise mid-tread quantization + exactly-k magnitude
+    sparsification emitting the sparse wire tuple ``(codes int8,
+    scales f32, mask int8)``. The scale is the dense absmax (top-k
+    keeps the largest entry), dropped coordinates get code 0, and the
+    zero-preserving mid-tread dequantizer maps code 0 to exactly 0.0 —
+    so the dense dequantize epilogue serves the sparse format too.
+    Selection is rank-by-pairwise-comparison (no sort, no scatter):
+    O(block^2) compares, all VPU-friendly elementwise/reduction ops,
+    identical expression to the reference so the paths agree
+    bit-for-bit.
+
+``masked_sum_limbs``
+    The secure-aggregation cohort fold: sums C clients' uint64
+    fixed-point masked vectors mod 2^64 in one bandwidth-bound pass.
+    TPU has no 64-bit integers, so values arrive as (hi, lo) uint32
+    limb pairs and the kernel does radix-2^16 column reduction —
+    split each limb into two 16-bit digits, column-sum (exact in
+    uint32 for C <= 2^16), ripple carries. Modular sums are
+    associative, so the result is bit-exact vs the sequential NumPy
+    oracle in ``MaskedSumAggregator``.
+
+``dequantize_blocks`` (re-exported from ``kernels/quantize``)
+    The dequantize epilogue: ``codes * scale`` per block. Shared by
+    the dense and sparse formats because code 0 -> 0.0 exactly.
+
+Validated against the twins in interpret mode on CPU
+(tests/test_wire_kernels.py); on TPU the same kernels run compiled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quantize import ROWS_PER_TILE
+from repro.kernels.quantize import dequantize_blocks  # noqa: F401  (epilogue)
+
+#: Column tile of the masked-sum kernel: 512 uint32 lanes = 2 KiB per
+#: limb row in VMEM, a multiple of the 128-lane register width.
+LIMB_TILE = 512
+
+
+# ---------------------------------------------------------------------------
+# (a) fused quantize + per-block top-k sparsify
+# ---------------------------------------------------------------------------
+
+
+def _quantize_topk_kernel(x_ref, codes_ref, scales_ref, mask_ref, *,
+                          bits: int, k: int):
+    x = x_ref[...].astype(jnp.float32)                    # (ROWS, block)
+    block = x.shape[1]
+    L = 2 ** (bits - 1)
+    absx = jnp.abs(x)
+    absmax = jnp.max(absx, axis=1, keepdims=True)         # (ROWS, 1)
+    # reciprocal multiply, not division: bit-identical to the ref twin
+    scale = absmax * jnp.float32(1.0 / (L - 1))
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(jnp.rint(x / safe), -(L - 1), L - 1)
+    # exactly-k selection by pairwise rank, ties -> lower index (same
+    # expression as ref.topk_mask_ref: bit-identical across backends)
+    a_i = absx[:, :, None]
+    a_j = absx[:, None, :]
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    ahead = (a_j > a_i) | ((a_j == a_i) & (j_idx < i_idx)[None])
+    rank = jnp.sum(ahead.astype(jnp.int32), axis=2)
+    keep = rank < k
+    codes_ref[...] = jnp.where(keep, codes, 0.0).astype(jnp.int8)
+    scales_ref[...] = scale[:, 0]
+    mask_ref[...] = keep.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "k", "interpret"))
+def quantize_topk_blocks(x2d, bits: int, k: int, interpret: bool = True):
+    """x2d: (n_blocks, block) -> (codes int8, scales f32, mask int8)."""
+    n, block = x2d.shape
+    assert n % ROWS_PER_TILE == 0, "pad n_blocks to ROWS_PER_TILE"
+    grid = (n // ROWS_PER_TILE,)
+    return pl.pallas_call(
+        functools.partial(_quantize_topk_kernel, bits=bits, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS_PER_TILE, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((ROWS_PER_TILE, block), lambda i: (i, 0)),
+                   pl.BlockSpec((ROWS_PER_TILE,), lambda i: (i,)),
+                   pl.BlockSpec((ROWS_PER_TILE, block), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, block), jnp.int8),
+                   jax.ShapeDtypeStruct((n,), jnp.float32),
+                   jax.ShapeDtypeStruct((n, block), jnp.int8)],
+        interpret=interpret,
+    )(x2d)
+
+
+# ---------------------------------------------------------------------------
+# (b) fixed-point masked sum over a stacked cohort
+# ---------------------------------------------------------------------------
+
+
+def _masked_sum_kernel(hi_ref, lo_ref, hi_out, lo_out):
+    hi = hi_ref[...]                                      # (C, TILE) uint32
+    lo = lo_ref[...]
+    mask16 = jnp.uint32(0xFFFF)
+    # radix-2^16 column reduction: 16-bit digit sums are exact in
+    # uint32 for C <= 2^16 clients, then ripple the carries
+    s0 = jnp.sum(lo & mask16, axis=0, dtype=jnp.uint32)
+    s1 = jnp.sum(lo >> 16, axis=0, dtype=jnp.uint32)
+    s2 = jnp.sum(hi & mask16, axis=0, dtype=jnp.uint32)
+    s3 = jnp.sum(hi >> 16, axis=0, dtype=jnp.uint32)
+    d0 = s0 & mask16
+    t1 = s1 + (s0 >> 16)
+    d1 = t1 & mask16
+    t2 = s2 + (t1 >> 16)
+    d2 = t2 & mask16
+    t3 = s3 + (t2 >> 16)          # carry past bit 64 drops: mod 2^64
+    d3 = t3 & mask16
+    hi_out[...] = d2 | (d3 << 16)
+    lo_out[...] = d0 | (d1 << 16)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_sum_limbs(hi, lo, interpret: bool = True):
+    """(C, n) uint32 limb pairs -> ((n,), (n,)) cohort sum mod 2^64."""
+    c, n = hi.shape
+    assert hi.shape == lo.shape
+    assert n % LIMB_TILE == 0, "pad columns to LIMB_TILE"
+    grid = (n // LIMB_TILE,)
+    return pl.pallas_call(
+        _masked_sum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((c, LIMB_TILE), lambda i: (0, i)),
+                  pl.BlockSpec((c, LIMB_TILE), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((LIMB_TILE,), lambda i: (i,)),
+                   pl.BlockSpec((LIMB_TILE,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.uint32),
+                   jax.ShapeDtypeStruct((n,), jnp.uint32)],
+        interpret=interpret,
+    )(hi, lo)

@@ -196,6 +196,8 @@ class TestOnlySelection:
         assert mods == ["table1", "fig2_constraints"] and sel == []
         mods, sel = select("kernel_bench")       # legacy module name
         assert mods == [] and sel == ["kernels"]
+        mods, sel = select("wire_bench")         # module-name alias
+        assert mods == [] and sel == ["wire"]
         mods, sel = select("fl.executor")        # benchmark name -> area
         assert sel == ["fl_engine"]
 
@@ -204,7 +206,7 @@ class TestOnlySelection:
         load_registry()
         mods, sel = select(None)
         assert mods == ANALYSIS_MODULES
-        assert set(sel) == {"fl_engine", "kernels"}
+        assert set(sel) == {"fl_engine", "kernels", "wire"}
 
 
 # -------------------------------------------------------------- registry
@@ -212,7 +214,8 @@ class TestOnlySelection:
 EXPECTED = {"fl_engine": {"fl.executor", "fl.dynamics", "fl.aggregator",
                           "fl.wall_clock", "fl.controller"},
             "kernels": {"kernel.quantize_roundtrip",
-                        "kernel.blockwise_attention", "charlm.grad_step"}}
+                        "kernel.blockwise_attention", "charlm.grad_step"},
+            "wire": {"wire.quantize_topk", "wire.masked_sum"}}
 
 
 @pytest.fixture(scope="module")

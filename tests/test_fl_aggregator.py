@@ -223,11 +223,14 @@ def _fixed_point_mean(deltas, weights, scale):
     return jax.tree.unflatten(treedef, out)
 
 
-def test_masked_sum_exact_under_every_dropout_combination():
+@pytest.mark.parametrize("path", ["numpy", "kernel"])
+def test_masked_sum_exact_under_every_dropout_combination(path):
     """Pairwise-mask cancellation + dropped-mask reconstruction is
     modular-integer exact: for EVERY subset of a 4-client cohort that
     reports (the PR 2 churn/deadline dropout patterns), the unmasked
-    result equals the plain weighted mean of the reporters."""
+    result equals the plain weighted mean of the reporters — on both
+    the sequential NumPy oracle and the stacked kernel fold (modular
+    sums are associative, so the paths must be bit-identical)."""
     rng = np.random.default_rng(0)
     cohort = [_ci(i, shard=50 + 17 * i) for i in range(4)]
     deltas = [{"a": jnp.asarray(rng.normal(size=(3, 2)).astype(np.float32)),
@@ -236,7 +239,7 @@ def test_masked_sum_exact_under_every_dropout_combination():
     weights = [float(ci.shard_size) for ci in cohort]
     for n_rep in range(1, len(cohort) + 1):
         for subset in combinations(range(len(cohort)), n_rep):
-            agg = MaskedSumAggregator(use_weights=True)
+            agg = MaskedSumAggregator(use_weights=True, path=path)
             agg.reset(FedAvg(FLC).aggregate)
             agg.begin_round(3, cohort)
             for i in subset:

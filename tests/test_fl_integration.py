@@ -78,17 +78,65 @@ def test_compression_in_loop_reduces_wire(tiny_setup):
     ds, cfg, fl = tiny_setup
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    delta = jax.tree.map(lambda p: jnp.ones_like(p) * 0.01, params)
+    # varying values: the mid-tread grid represents constant blocks
+    # exactly, which would make every error below zero
+    delta = jax.tree.map(
+        lambda p: 0.01 * jnp.cos(jnp.arange(p.size, dtype=jnp.float32)
+                                 ).reshape(p.shape).astype(p.dtype), params)
     mb0 = wire_mb(delta, 0)
     mb1 = wire_mb(delta, 1)
     mb2 = wire_mb(delta, 2)
     assert mb1 < mb0 / 3.5 and mb2 < mb0 / 12
+    mb2s = wire_mb(delta, 2, topk=32)
+    assert mb2s < mb2  # sparse wire format ships fewer bytes still
     err1 = compression_error(delta, 1)["rel_l2"]
     err2 = compression_error(delta, 2)["rel_l2"]
-    assert err1 < err2 < 1.0
+    errs = compression_error(delta, 2, topk=32)["rel_l2"]
+    assert 0 < err1 < err2 < errs <= 1.0
     rt = compress_decompress(delta, 2)
     # structure preserved
     assert jax.tree.structure(rt) == jax.tree.structure(delta)
+
+
+def test_wire_topk_threads_to_client_wire_path(tiny_setup):
+    """fl.wire_topk threads through both client paths (sequential
+    ClientRunner.train_client and the batched executor): at q>0 the
+    sparse format ships fewer bytes and a sparser delta than dense,
+    while q=0 ignores the knob (no quantized wire to sparsify)."""
+    ds, cfg, fl = tiny_setup
+    from repro.core.client import ClientRunner
+    from repro.core.policy import Knobs
+    from repro.core.resources import calibrate
+    from repro.data.federated import FederatedData
+    from repro.fl import ClientInfo, DeviceProfile, make_executor
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    resources = calibrate(count_params(params), fl)
+    data = FederatedData(ds.train, fl.num_clients, seed=fl.seed)
+    dense = ClientRunner(model, fl, data, resources)
+    sparse = ClientRunner(model, fl.replace(wire_topk=32), data, resources)
+
+    def nnz(result):
+        return sum(int(np.sum(np.asarray(leaf) != 0))
+                   for leaf in jax.tree.leaves(result.delta))
+
+    kn = Knobs(k=cfg.num_layers, s=2, b=4, q=1, grad_accum=1)
+    r_d = dense.train_client(0, params, kn)
+    r_s = sparse.train_client(0, params, kn)
+    assert 0 < r_s.wire_mb_actual < r_d.wire_mb_actual
+    assert nnz(r_s) < nnz(r_d)
+    assert np.isfinite(r_s.train_loss)
+    # q=0 ships raw fp32 regardless of wire_topk
+    kn0 = Knobs(k=cfg.num_layers, s=2, b=4, q=0, grad_accum=1)
+    assert sparse.train_client(0, params, kn0).wire_mb_actual == \
+        pytest.approx(dense.train_client(0, params, kn0).wire_mb_actual)
+    # batched executor reads runner.fl.wire_topk too
+    profile = DeviceProfile("default", fl.budgets, resources=resources)
+    assignments = [(ClientInfo(0, profile, 1), kn)]
+    b_s, = make_executor("batched", sparse).run_round(params, assignments)
+    b_d, = make_executor("batched", dense).run_round(params, assignments)
+    assert 0 < b_s.wire_mb_actual < b_d.wire_mb_actual
+    assert b_s.wire_mb_actual == pytest.approx(r_s.wire_mb_actual, rel=1e-4)
 
 
 def test_checkpoint_roundtrip(tiny_setup, tmp_path):
