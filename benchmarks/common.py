@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 RESULTS = os.environ.get("RESULTS_DIR", "results")
 

@@ -9,10 +9,9 @@ from __future__ import annotations
 
 import argparse
 import glob
-import json
 import os
 
-from benchmarks.common import RESULTS, load_dryrun, load_fl
+from benchmarks.common import load_dryrun, load_fl
 from benchmarks.run import REPO_ROOT
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]

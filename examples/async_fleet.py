@@ -102,10 +102,10 @@ for name, res in results.items():
 buff_hit = rounds_to(results["fedbuff"], target)
 sync_hit = rounds_to(results["sync"], target)
 if buff_hit is not None and (sync_hit is None or buff_hit < sync_hit):
-    print(f"\nFedBuff got there first: the slow tier's late reports were "
-          f"applied (staleness-discounted) instead of thrown away at the "
-          f"barrier, so the same cohort budget kept improving the model "
-          f"after the discard baseline stalled.")
+    print("\nFedBuff got there first: the slow tier's late reports were "
+          "applied (staleness-discounted) instead of thrown away at the "
+          "barrier, so the same cohort budget kept improving the model "
+          "after the discard baseline stalled.")
 
 # --- the same comparison on the virtual wall clock -----------------------
 # time_mode="wall_clock": rounds begin when the previous barrier/buffer
@@ -138,7 +138,7 @@ for name, res in wall.items():
 b_s = seconds_to_target(wall["fedbuff"], wall_target)
 s_s = seconds_to_target(wall["sync"], wall_target)
 if b_s is not None and (s_s is None or b_s < s_s):
-    print(f"\nFedBuff wins in *seconds*, not just rounds: its rounds end "
-          f"at buffer events instead of deadline expiries, and the slow "
-          f"tier's reports land at their real arrival times — the latency "
-          f"claim the round-count simulation could never show.")
+    print("\nFedBuff wins in *seconds*, not just rounds: its rounds end "
+          "at buffer events instead of deadline expiries, and the slow "
+          "tier's reports land at their real arrival times — the latency "
+          "claim the round-count simulation could never show.")

@@ -19,40 +19,47 @@ _BUDGET = os.environ.get("REPRO_EXAMPLE_ROUNDS")
 STEPS = 60 if _BUDGET is None else max(5, int(_BUDGET) * 5)
 NEW_TOKENS = 200 if _BUDGET is None else 40
 
-ds = load_corpus()
-cfg = get_config("charlm-shakespeare").replace(vocab_size=max(ds.vocab_size, 64))
-model = build(cfg)
-params = model.init(jax.random.PRNGKey(0))
-opt = adamw(3e-3)
-opt_state = opt.init(params)
 
-grad_fn = jax.jit(lambda p, b: jax.value_and_grad(
-    model.train_loss, has_aux=True)(p, b))
-rng = np.random.default_rng(0)
-print(f"training {STEPS} steps on", len(ds.train), "chars ...")
-for step in range(STEPS):
-    batch = {k: jnp.asarray(v)
-             for k, v in sample_batch(ds.train, rng, 32, 64).items()}
-    (loss, _), grads = grad_fn(params, batch)
-    ups, opt_state = opt.update(grads, opt_state, params)
-    params = apply_updates(params, ups)
-    if step % 10 == 0:
-        print(f"  step {step:3d} loss {float(loss):.3f}")
+def main():
+    ds = load_corpus()
+    cfg = get_config("charlm-shakespeare").replace(
+        vocab_size=max(ds.vocab_size, 64))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(3e-3)
+    opt_state = opt.init(params)
 
-# sample through the serving path
-prompt = "HAMLET:\n"
-toks = jnp.asarray(ds.encode(prompt))[None, :]
-logits, cache = jax.jit(
-    lambda p, b: model.prefill(p, b, max_new_tokens=NEW_TOKENS))(
-        params, {"tokens": toks})
-step_fn = jax.jit(model.decode_step)
-out = list(np.asarray(toks[0]))
-key = jax.random.PRNGKey(1)
-tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-for _ in range(NEW_TOKENS):
-    out.append(int(tok[0, 0]))
-    logits, cache = step_fn(params, cache, tok)
-    key, sub = jax.random.split(key)
-    tok = jax.random.categorical(sub, logits[:, -1] / 0.8)[:, None]
-print("\n--- sample ---")
-print(ds.decode(out))
+    grad_fn = jax.jit(lambda p, b: jax.value_and_grad(
+        model.train_loss, has_aux=True)(p, b))
+    rng = np.random.default_rng(0)
+    print(f"training {STEPS} steps on", len(ds.train), "chars ...")
+    for step in range(STEPS):
+        batch = {k: jnp.asarray(v)
+                 for k, v in sample_batch(ds.train, rng, 32, 64).items()}
+        (loss, _), grads = grad_fn(params, batch)
+        ups, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, ups)
+        if step % 10 == 0:
+            print(f"  step {step:3d} loss {float(loss):.3f}")
+
+    # sample through the serving path
+    prompt = "HAMLET:\n"
+    toks = jnp.asarray(ds.encode(prompt))[None, :]
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, max_new_tokens=NEW_TOKENS))(
+            params, {"tokens": toks})
+    step_fn = jax.jit(model.decode_step)
+    out = list(np.asarray(toks[0]))
+    key = jax.random.PRNGKey(1)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    for _ in range(NEW_TOKENS):
+        out.append(int(tok[0, 0]))
+        logits, cache = step_fn(params, cache, tok)
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(sub, logits[:, -1] / 0.8)[:, None]
+    print("\n--- sample ---")
+    print(ds.decode(out))
+
+
+if __name__ == "__main__":
+    main()

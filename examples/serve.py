@@ -13,43 +13,50 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.models import build
 
-ap = argparse.ArgumentParser()
-ap.add_argument("--arch", default="recurrentgemma-2b")
-ap.add_argument("--batch", type=int, default=4)
-ap.add_argument("--prompt-len", type=int, default=64)
-ap.add_argument("--new-tokens", type=int, default=32)
-args = ap.parse_args()
 
-cfg = get_smoke_config(args.arch)
-model = build(cfg)
-params = model.init(jax.random.PRNGKey(0))
-rng = np.random.default_rng(0)
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
 
-batch = {"tokens": jnp.asarray(
-    rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)}
-if cfg.frontend and cfg.frontend.kind == "vision":
-    batch["patch_embeds"] = jnp.asarray(rng.normal(
-        size=(args.batch, cfg.frontend.num_prefix_tokens,
-              cfg.frontend.embed_dim)), jnp.float32)
-if cfg.encdec:
-    batch["src_embeds"] = jnp.asarray(rng.normal(
-        size=(args.batch, 32, cfg.frontend.embed_dim)), jnp.float32)
+    cfg = get_smoke_config(args.arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
 
-t0 = time.time()
-logits, cache = jax.jit(lambda p, b: model.prefill(
-    p, b, max_new_tokens=args.new_tokens))(params, batch)
-jax.block_until_ready(logits)
-print(f"[{args.arch}] prefill {args.batch}x{args.prompt_len} "
-      f"in {time.time()-t0:.2f}s -> logits {logits.shape}")
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)}
+    if cfg.frontend and cfg.frontend.kind == "vision":
+        batch["patch_embeds"] = jnp.asarray(rng.normal(
+            size=(args.batch, cfg.frontend.num_prefix_tokens,
+                  cfg.frontend.embed_dim)), jnp.float32)
+    if cfg.encdec:
+        batch["src_embeds"] = jnp.asarray(rng.normal(
+            size=(args.batch, 32, cfg.frontend.embed_dim)), jnp.float32)
 
-step = jax.jit(model.decode_step)
-tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-t0 = time.time()
-for i in range(args.new_tokens):
-    logits, cache = step(params, cache, tok)
+    t0 = time.time()
+    logits, cache = jax.jit(lambda p, b: model.prefill(
+        p, b, max_new_tokens=args.new_tokens))(params, batch)
+    jax.block_until_ready(logits)
+    print(f"[{args.arch}] prefill {args.batch}x{args.prompt_len} "
+          f"in {time.time()-t0:.2f}s -> logits {logits.shape}")
+
+    step = jax.jit(model.decode_step)
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-jax.block_until_ready(tok)
-dt = time.time() - t0
-print(f"decoded {args.new_tokens} tokens/seq in {dt:.2f}s "
-      f"({args.batch*args.new_tokens/dt:.1f} tok/s); "
-      f"cache is O(window) for local-attn/recurrent blocks")
+    t0 = time.time()
+    for i in range(args.new_tokens):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    print(f"decoded {args.new_tokens} tokens/seq in {dt:.2f}s "
+          f"({args.batch*args.new_tokens/dt:.1f} tok/s); "
+          f"cache is O(window) for local-attn/recurrent blocks")
+
+
+if __name__ == "__main__":
+    main()

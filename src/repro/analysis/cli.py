@@ -1,0 +1,126 @@
+"""``python -m repro.analysis`` — run the rule engine from the shell.
+
+Exit codes: 0 clean (or everything suppressed by the baseline),
+1 new findings (or stale baseline entries), 2 usage error. CI runs
+``python -m repro.analysis --baseline ANALYSIS_BASELINE.json`` and
+fails on any finding the committed baseline doesn't already own.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Optional, Sequence
+
+from repro.analysis.baseline import DEFAULT_BASELINE, Baseline
+from repro.analysis.engine import (DEFAULT_CODE_PATHS, Analyzer,
+                                   default_rules)
+
+EXIT_CLEAN = 0
+EXIT_FINDINGS = 1
+EXIT_USAGE = 2
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-aware static analysis for the repro tree.")
+    p.add_argument("paths", nargs="*", default=None,
+                   help=f"files/directories to scan (default: "
+                        f"{', '.join(DEFAULT_CODE_PATHS)})")
+    p.add_argument("--root", default=".",
+                   help="repo root the paths are relative to")
+    p.add_argument("--baseline", default=None, metavar="FILE",
+                   help=f"suppression baseline to diff against "
+                        f"(e.g. {DEFAULT_BASELINE})")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="rewrite --baseline with the current findings "
+                        "and exit 0")
+    p.add_argument("--rules", default=None,
+                   help="comma-separated rule ids to run (default: all)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print rule metadata and exit")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="machine-readable JSON on stdout")
+    return p
+
+
+def _select_rules(spec: Optional[str]):
+    rules = default_rules()
+    if spec is None:
+        return rules, None
+    wanted = [s.strip() for s in spec.split(",") if s.strip()]
+    known = {r.id for r in rules}
+    unknown = [w for w in wanted if w not in known]
+    if unknown:
+        return None, (f"unknown rule(s) {', '.join(unknown)}; "
+                      f"available: {', '.join(sorted(known))}")
+    return [r for r in rules if r.id in wanted], None
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    rules, err = _select_rules(args.rules)
+    if err:
+        print(err, file=sys.stderr)
+        return EXIT_USAGE
+
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.id}  {r.title}")
+            print(f"    why:  {r.rationale}")
+            print(f"    fix:  {r.hint}")
+        return EXIT_CLEAN
+
+    paths = args.paths if args.paths else None
+    kwargs = {"rules": rules}
+    if paths:
+        kwargs["code_paths"] = paths
+    result = Analyzer(args.root, **kwargs).run()
+
+    baseline_path = args.baseline
+    if baseline_path is None and os.path.exists(
+            os.path.join(args.root, DEFAULT_BASELINE)) and not paths:
+        baseline_path = os.path.join(args.root, DEFAULT_BASELINE)
+
+    if args.update_baseline:
+        if baseline_path is None:
+            if paths:
+                print("--update-baseline needs --baseline FILE when "
+                      "scanning explicit paths", file=sys.stderr)
+                return EXIT_USAGE
+            baseline_path = os.path.join(args.root, DEFAULT_BASELINE)
+        Baseline.from_findings(result.findings).save(baseline_path)
+        print(f"baseline written: {baseline_path} "
+              f"({len(result.findings)} findings)")
+        return EXIT_CLEAN
+
+    if baseline_path is not None:
+        base = Baseline.load(baseline_path)
+        new, suppressed, stale = base.diff(result.findings)
+    else:
+        new, suppressed, stale = list(result.findings), [], []
+
+    if args.as_json:
+        print(json.dumps({
+            "files_scanned": result.files_scanned,
+            "rules": result.rules_run,
+            "new": [f.to_json() for f in new],
+            "suppressed": [f.to_json() for f in suppressed],
+            "stale_baseline": stale,
+        }, indent=2))
+    else:
+        for f in new:
+            print(f.format())
+        for e in stale:
+            print(f"{e['path']}:{e['line']}: STALE baseline entry for "
+                  f"{e['rule']} (finding no longer exists; run "
+                  f"--update-baseline to drop it)")
+        print(f"\n{result.files_scanned} files, "
+              f"{len(result.rules_run)} rules: "
+              f"{len(new)} new finding(s), {len(suppressed)} suppressed "
+              f"by baseline, {len(stale)} stale baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'}")
+
+    return EXIT_FINDINGS if (new or stale) else EXIT_CLEAN

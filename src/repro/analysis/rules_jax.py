@@ -1,0 +1,508 @@
+"""JAX discipline rules: PRNG keys, jit static args, import-time device
+work, and Python-loop hot paths.
+
+These encode the invariants the federated stack leans on: client draws
+must be stream-deterministic (key reuse silently correlates clients),
+jit caches must stay warm (array-valued static args recompile every
+call), importing a module must not touch the device (breaks
+``jax.config`` ordering and multiprocess launch), and the engine's
+per-client control plane must stay visibly loop-free as the ROADMAP's
+million-client vectorization lands.
+"""
+from __future__ import annotations
+
+import ast
+import copy
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.engine import (ModuleRule, ParsedModule, call_name,
+                                   dotted_name, is_main_guard,
+                                   is_type_checking_guard, register_rule)
+
+# names (as dotted paths) that produce / transform PRNG keys
+_KEY_MAKERS = ("jax.random.PRNGKey", "jax.random.key",
+               "jax.random.fold_in", "jax.random.wrap_key_data")
+_SPLIT = ("jax.random.split",)
+_WEAK_KEY_PARAM = re.compile(r"^(rng|key|prng_?key)s?$|(_rng|_key)s?$")
+
+
+@dataclass
+class _KeyState:
+    """Per-key bookkeeping inside one scope."""
+
+    consumed: int = 0
+    split_line: Optional[int] = None
+    first_use_line: Optional[int] = None
+    loop_depth_defined: int = 0
+    weak: bool = False            # parameter-derived: only flag use-after-split
+    # constant-subscript slots of a split() key array
+    slots: Dict[object, "_KeyState"] = field(default_factory=dict)
+    is_array: bool = False        # result of split(k, n): consumed via [i]
+
+
+class _ScopeWalker:
+    """Straight-line walk of one function (or module) body, tracking
+    which names hold PRNG keys and where they are consumed."""
+
+    def __init__(self, rule: "PRNGKeyReuse", mod: ParsedModule):
+        self.rule = rule
+        self.mod = mod
+        self.findings: List = []
+        self.keys: Dict[str, _KeyState] = {}
+        self.loop_depth = 0
+
+    # -- helpers -----------------------------------------------------------
+
+    def _fresh(self, weak: bool = False, is_array: bool = False) -> _KeyState:
+        return _KeyState(loop_depth_defined=self.loop_depth, weak=weak,
+                         is_array=is_array)
+
+    def _consume(self, name: str, state: _KeyState, node: ast.AST,
+                 via_split: bool, carry: bool = False) -> None:
+        line = getattr(node, "lineno", 0)
+        if state.split_line is not None:
+            self.findings.append(self.rule.make_finding(
+                self.mod, node,
+                f"PRNG key '{name}' used after jax.random.split "
+                f"(split at line {state.split_line}); the parent key is "
+                f"spent once split"))
+        elif not state.weak and state.consumed >= 1:
+            self.findings.append(self.rule.make_finding(
+                self.mod, node,
+                f"PRNG key '{name}' consumed twice (first use at line "
+                f"{state.first_use_line}); two consumers of one key draw "
+                f"correlated randomness"))
+        elif (not carry and not state.weak
+              and self.loop_depth > state.loop_depth_defined):
+            self.findings.append(self.rule.make_finding(
+                self.mod, node,
+                f"PRNG key '{name}' consumed inside a loop but created "
+                f"outside it; every iteration draws the same stream",
+                hint="split or fold_in the key per iteration"))
+        state.consumed += 1
+        if state.first_use_line is None:
+            state.first_use_line = line
+        if via_split:
+            state.split_line = line
+
+    def _key_state_for_arg(self, arg: ast.AST
+                           ) -> Optional[Tuple[str, _KeyState]]:
+        """The tracked key a call argument refers to, if any."""
+        if isinstance(arg, ast.Name) and arg.id in self.keys:
+            st = self.keys[arg.id]
+            return (arg.id, st) if not st.is_array else None
+        if (isinstance(arg, ast.Subscript)
+                and isinstance(arg.value, ast.Name)
+                and arg.value.id in self.keys):
+            parent = self.keys[arg.value.id]
+            if not parent.is_array:
+                return None
+            idx = arg.slice
+            if isinstance(idx, ast.Constant):
+                slot = parent.slots.setdefault(idx.value, self._fresh())
+                return (f"{arg.value.id}[{idx.value!r}]", slot)
+        return None
+
+    def _value_makes_key(self, value: ast.AST) -> Optional[str]:
+        """'key' | 'array' when the RHS produces a key / key array."""
+        if not isinstance(value, ast.Call):
+            if (isinstance(value, ast.Subscript)
+                    and isinstance(value.value, ast.Name)
+                    and value.value.id in self.keys
+                    and self.keys[value.value.id].is_array):
+                return "key"
+            return None
+        name = call_name(value)
+        if name in _KEY_MAKERS:
+            return "key"
+        if name in _SPLIT:
+            return "array"
+        return None
+
+    # -- the walk ----------------------------------------------------------
+
+    def walk(self, body: List[ast.stmt]) -> None:
+        for stmt in body:
+            self.visit_stmt(stmt)
+
+    def visit_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return              # nested scopes walked separately
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            self.visit_expr_children(stmt.iter if hasattr(stmt, "iter")
+                                     else stmt.test)
+            self.loop_depth += 1
+            self.walk(stmt.body)
+            self.loop_depth -= 1
+            self.walk(stmt.orelse)
+            return
+        if isinstance(stmt, ast.If):
+            self.visit_expr_children(stmt.test)
+            # branches are alternatives: consumptions in one must not
+            # count against the other, so walk each from a snapshot and
+            # keep the heavier outcome per key
+            before = copy.deepcopy(self.keys)
+            self.walk(stmt.body)
+            after_body = self.keys
+            self.keys = copy.deepcopy(before)
+            self.walk(stmt.orelse)
+            for name, st in after_body.items():
+                cur = self.keys.get(name)
+                if cur is None or st.consumed > cur.consumed:
+                    self.keys[name] = st
+            return
+        if isinstance(stmt, ast.Try):
+            self.walk(stmt.body)
+            for h in stmt.handlers:
+                self.walk(h.body)
+            self.walk(stmt.orelse)
+            self.walk(stmt.finalbody)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.visit_expr_children(item.context_expr)
+            self.walk(stmt.body)
+            return
+        if isinstance(stmt, ast.Assign):
+            # the carry pattern `key, sub = jax.random.split(key)` (or
+            # `key = fold_in(key, i)`) rebinds the spent key in the same
+            # statement — legal every loop iteration
+            kind = self._value_makes_key(stmt.value)
+            carry_names = (self._rebound_names(stmt.targets)
+                           if kind is not None else set())
+            self.visit_expr_children(stmt.value, carry_names=carry_names)
+            for tgt in stmt.targets:
+                self._bind(tgt, kind, stmt.value)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self.visit_expr_children(stmt.value)
+            return
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self.visit_expr_children(stmt.value)
+            self._bind(stmt.target, self._value_makes_key(stmt.value),
+                       stmt.value)
+            return
+        self.visit_expr_children(stmt)
+
+    def _bind(self, target: ast.AST, kind: Optional[str],
+              value: ast.AST) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            # a, b = jax.random.split(k) unpacks to fresh keys
+            if kind == "array":
+                for el in target.elts:
+                    if isinstance(el, ast.Name):
+                        self.keys[el.id] = self._fresh()
+            else:
+                for el in target.elts:
+                    self._bind(el, None, value)
+            return
+        if not isinstance(target, ast.Name):
+            return
+        if kind == "key":
+            self.keys[target.id] = self._fresh()
+        elif kind == "array":
+            self.keys[target.id] = self._fresh(is_array=True)
+        elif target.id in self.keys:
+            del self.keys[target.id]   # reassigned to a non-key
+
+    @staticmethod
+    def _rebound_names(targets: List[ast.AST]) -> Set[str]:
+        out: Set[str] = set()
+        for tgt in targets:
+            if isinstance(tgt, ast.Name):
+                out.add(tgt.id)
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                out |= {el.id for el in tgt.elts
+                        if isinstance(el, ast.Name)}
+        return out
+
+    def visit_expr_children(self, node: Optional[ast.AST],
+                            carry_names: Set[str] = frozenset()) -> None:
+        if node is None:
+            return
+        if isinstance(node, ast.IfExp):
+            # ternary branches are alternatives, like If statements
+            self.visit_expr_children(node.test, carry_names)
+            before = copy.deepcopy(self.keys)
+            self.visit_expr_children(node.body, carry_names)
+            after_body = self.keys
+            self.keys = before
+            self.visit_expr_children(node.orelse, carry_names)
+            for name, st in after_body.items():
+                cur = self.keys.get(name)
+                if cur is None or st.consumed > cur.consumed:
+                    self.keys[name] = st
+            return
+        if isinstance(node, ast.Call):
+            via_split = call_name(node) in _SPLIT
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                ref = self._key_state_for_arg(arg)
+                if ref is not None:
+                    self._consume(ref[0], ref[1], node, via_split,
+                                  carry=ref[0] in carry_names)
+                else:
+                    self.visit_expr_children(arg, carry_names)
+            self.visit_expr_children(node.func, carry_names)
+            return
+        for child in ast.iter_child_nodes(node):
+            self.visit_expr_children(child, carry_names)
+
+
+@register_rule
+class PRNGKeyReuse(ModuleRule):
+    """JAX001 — a PRNG key consumed twice, after a split, or in a loop."""
+
+    id = "JAX001"
+    title = "PRNG key reuse"
+    rationale = ("Client shards and model init draw from explicit keys; "
+                 "reusing a key (or its parent after a split) makes two "
+                 "draws identical, silently correlating clients.")
+    hint = ("split the key (`k1, k2 = jax.random.split(key)`) or fold in "
+            "a counter (`jax.random.fold_in(key, i)`) per consumer")
+
+    def check_module(self, mod: ParsedModule) -> List:
+        findings: List = []
+        scopes: List[Tuple[List[ast.stmt], List[ast.arg]]] = [
+            (mod.tree.body, [])]
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = (node.args.posonlyargs + node.args.args
+                        + node.args.kwonlyargs)
+                scopes.append((node.body, args))
+        for body, params in scopes:
+            w = _ScopeWalker(self, mod)
+            for p in params:
+                if _WEAK_KEY_PARAM.search(p.arg):
+                    w.keys[p.arg] = _KeyState(weak=True)
+            w.walk(body)
+            findings.extend(w.findings)
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# JAX002 — array-valued / unhashable static jit arguments
+# ---------------------------------------------------------------------------
+
+_JIT_NAMES = ("jax.jit", "pjit", "jax.pjit")
+
+
+def _jit_call_static_info(call: ast.Call) -> Optional[Tuple[Set[int],
+                                                            Set[str]]]:
+    """(static positions, static names) declared by a jax.jit(...) or
+    functools.partial(jax.jit, ...) call; None when not a jit call."""
+    name = call_name(call)
+    inner = call
+    if name in ("functools.partial", "partial"):
+        if not (call.args and isinstance(call.args[0], (ast.Name,
+                                                        ast.Attribute))
+                and dotted_name(call.args[0]) in _JIT_NAMES):
+            return None
+    elif name not in _JIT_NAMES:
+        return None
+    nums: Set[int] = set()
+    names: Set[str] = set()
+    for kw in inner.keywords:
+        if kw.arg == "static_argnums":
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, int):
+                    nums.add(c.value)
+        elif kw.arg == "static_argnames":
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                    names.add(c.value)
+    return nums, names
+
+
+_ARRAYISH_CALLS = re.compile(
+    r"^(jnp|jax\.numpy)\.|^np\.(array|asarray|arange|ones|zeros)$"
+    r"|^jax\.(device_put|random\.)")
+
+
+def _is_unhashable_or_array(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return bool(_ARRAYISH_CALLS.search(call_name(node)))
+    return False
+
+
+@register_rule
+class StaticArgAbuse(ModuleRule):
+    """JAX002 — unhashable / array-valued values for static jit args."""
+
+    id = "JAX002"
+    title = "non-hashable or array-valued static jit argument"
+    rationale = ("A static_argnums argument is hashed into the jit cache "
+                 "key: arrays raise, lists/dicts raise, and a fresh value "
+                 "per call recompiles every round.")
+    hint = ("pass arrays as traced (non-static) arguments; keep static "
+            "args hashable scalars/tuples")
+
+    def check_module(self, mod: ParsedModule) -> List:
+        findings: List = []
+        # map: local callable name -> (static positions, static names)
+        jitted: Dict[str, Tuple[Set[int], Set[str]]] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                info = _jit_call_static_info(node.value)
+                if info is not None and (info[0] or info[1]):
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            jitted[tgt.id] = info
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call):
+                        info = _jit_call_static_info(dec)
+                        if info is not None and (info[0] or info[1]):
+                            # positions shift by bound args? plain defs only
+                            jitted[node.name] = info
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            # direct decl check: static_argnums values must be ints
+            info = _jit_call_static_info(node)
+            if info is not None:
+                for kw in node.keywords:
+                    if kw.arg == "static_argnums" and _is_unhashable_or_array(
+                            kw.value) and not isinstance(
+                            kw.value, (ast.List, ast.Tuple)):
+                        findings.append(self.make_finding(
+                            mod, node,
+                            "static_argnums must be ints or an int "
+                            "sequence"))
+            # call-site check against locally declared static positions
+            name = call_name(node)
+            if name in jitted:
+                nums, names = jitted[name]
+                for i, arg in enumerate(node.args):
+                    if i in nums and _is_unhashable_or_array(arg):
+                        findings.append(self.make_finding(
+                            mod, node,
+                            f"argument {i} of '{name}' is declared static "
+                            f"but receives an array/unhashable value"))
+                for kw in node.keywords:
+                    if kw.arg in names and _is_unhashable_or_array(kw.value):
+                        findings.append(self.make_finding(
+                            mod, node,
+                            f"argument '{kw.arg}' of '{name}' is declared "
+                            f"static but receives an array/unhashable "
+                            f"value"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# JAX003 — device computation at import time
+# ---------------------------------------------------------------------------
+
+_DEVICE_CALL = re.compile(
+    r"^(jnp|jax\.numpy)\.|^jax\.random\.|^jax\.device_put$|^jax\.make_array")
+#: wrappers that *define* computation without running it — allowed at
+#: import time (jit/vmap/grad return functions; pallas_call builds one)
+_DEFINING = re.compile(
+    r"^jax\.(jit|vmap|pmap|grad|value_and_grad|checkpoint|custom_vjp|"
+    r"custom_jvp)$|^functools\.partial$|^partial$|pallas_call")
+
+
+@register_rule
+class ImportTimeDeviceWork(ModuleRule):
+    """JAX003 — jnp/device computation executed at module import."""
+
+    id = "JAX003"
+    title = "device computation at import time"
+    rationale = ("Import-time jnp work initializes the backend before "
+                 "jax.config / JAX_PLATFORMS can take effect, breaks "
+                 "subprocess launch, and hides compile cost in import.")
+    hint = ("move the computation into a function or lazy cache; module "
+            "scope may only *define* jitted callables, not run them")
+
+    def _flag_calls(self, mod: ParsedModule, node: ast.AST,
+                    findings: List) -> None:
+        # manual walk so Lambda bodies are skipped: a lambda at module
+        # scope only *defines* computation, it doesn't run it
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            if isinstance(n, ast.Lambda):
+                continue
+            if isinstance(n, ast.Call):
+                name = call_name(n)
+                if _DEVICE_CALL.search(name) and not _DEFINING.search(name):
+                    findings.append(self.make_finding(
+                        mod, n, f"'{name}(...)' runs on the device at "
+                                f"import time"))
+            stack.extend(ast.iter_child_nodes(n))
+
+    def _walk_toplevel(self, mod: ParsedModule, body: List[ast.stmt],
+                       findings: List) -> None:
+        for stmt in body:
+            if is_main_guard(stmt) or is_type_checking_guard(stmt):
+                continue
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # default-arg expressions evaluate at import time
+                a = stmt.args
+                for d in list(a.defaults) + [d for d in a.kw_defaults if d]:
+                    self._flag_calls(mod, d, findings)
+                continue
+            if isinstance(stmt, ast.ClassDef):
+                self._walk_toplevel(mod, stmt.body, findings)
+                continue
+            if isinstance(stmt, (ast.If, ast.Try, ast.With)):
+                for sub in ast.iter_child_nodes(stmt):
+                    if isinstance(sub, ast.stmt):
+                        self._walk_toplevel(mod, [sub], findings)
+                continue
+            self._flag_calls(mod, stmt, findings)
+
+    def check_module(self, mod: ParsedModule) -> List:
+        findings: List = []
+        self._walk_toplevel(mod, mod.tree.body, findings)
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# JAX004 — Python loops over per-client state in the engine hot path
+# ---------------------------------------------------------------------------
+
+_CLIENTISH = re.compile(
+    r"client|survivor|sampled|cohort|fleet|participant|roster")
+
+
+@register_rule
+class PerClientPythonLoop(ModuleRule):
+    """JAX004 — per-client Python for-loop in fl/engine.py|dynamics.py."""
+
+    id = "JAX004"
+    title = "Python loop over per-client state in a hot path"
+    rationale = ("The round control plane iterates Python-side per "
+                 "client, capping fleets at thousands; the ROADMAP's "
+                 "million-client item rewrites these as jitted array "
+                 "programs over client-state arrays.")
+    hint = ("vectorize over a client axis (vmap / masked array program); "
+            "new hot-path code must not add per-client Python loops")
+    paths = ("src/repro/fl/engine.py", "src/repro/fl/dynamics.py")
+
+    def check_module(self, mod: ParsedModule) -> List:
+        findings: List = []
+        funcs = [n for n in ast.walk(mod.tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        for fn in funcs:
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.For):
+                    continue
+                try:
+                    text = ast.unparse(node.iter) + " " + ast.unparse(
+                        node.target)
+                except Exception:
+                    text = ""
+                if _CLIENTISH.search(text):
+                    findings.append(self.make_finding(
+                        mod, node,
+                        f"per-client Python loop over "
+                        f"'{ast.unparse(node.iter)}' in "
+                        f"{fn.name}()"))
+        return findings

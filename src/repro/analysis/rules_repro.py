@@ -1,0 +1,293 @@
+"""Repro-specific rules: kernel/ref twins, benchmark metric specs, and
+exact-integer wire/token accounting.
+
+These guard the paper's core claim — exact constraint accounting — and
+the PR-7 contract that every Pallas kernel has a bit-exact pure-jnp
+twin behind one dispatch point.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.engine import (ModuleRule, ParsedModule, ProjectRule,
+                                   call_name, register_rule)
+
+# ---------------------------------------------------------------------------
+# REPRO001 — every public kernel has a ref twin, an ops dispatch, and a
+# test referencing it
+# ---------------------------------------------------------------------------
+
+KERNEL_MODULES = ("src/repro/kernels/wire.py",
+                  "src/repro/kernels/quantize.py",
+                  "src/repro/kernels/flash_attention.py")
+REF_MODULE = "src/repro/kernels/ref.py"
+OPS_MODULE = "src/repro/kernels/ops.py"
+
+
+def _public_functions(mod: ParsedModule) -> List[ast.FunctionDef]:
+    return [n for n in mod.tree.body
+            if isinstance(n, ast.FunctionDef)
+            and not n.name.startswith("_")]
+
+
+@register_rule
+class KernelRefTwin(ProjectRule):
+    """REPRO001 — kernels need a ref twin, ops dispatch, and a test."""
+
+    id = "REPRO001"
+    title = "Pallas kernel without ref twin / dispatch / bit-equality test"
+    rationale = ("The wire path's correctness story is the bit-exact "
+                 "pure-jnp twin: every public kernel must have a "
+                 "kernels/ref.py counterpart, be dispatched through "
+                 "kernels/ops.py, and be pinned by a test.")
+    hint = ("add `<name>_ref` to kernels/ref.py, dispatch both paths in "
+            "kernels/ops.py, and pin kernel-vs-ref bit equality in tests/")
+
+    def check_project(self, modules: Dict[str, ParsedModule],
+                      context: Dict[str, ParsedModule]) -> List:
+        findings: List = []
+        ref = modules.get(REF_MODULE)
+        ops = modules.get(OPS_MODULE)
+        ref_bases = ([f.name[:-4] for f in _public_functions(ref)
+                      if f.name.endswith("_ref")] if ref else [])
+        ops_src = ops.source if ops else ""
+        test_src = "\n".join(m.source for p, m in context.items()
+                             if "test" in p)
+        for path in KERNEL_MODULES:
+            mod = modules.get(path)
+            if mod is None:
+                continue
+            for fn in _public_functions(mod):
+                name = fn.name
+                twin = next((b for b in ref_bases
+                             if name == b or name.startswith(b)
+                             or b.startswith(name)), None)
+                if twin is None:
+                    findings.append(self.make_finding(
+                        mod, fn,
+                        f"kernel '{name}' has no pure-jnp twin in "
+                        f"kernels/ref.py"))
+                    continue
+                if name not in ops_src:
+                    findings.append(self.make_finding(
+                        mod, fn,
+                        f"kernel '{name}' is not dispatched in "
+                        f"kernels/ops.py"))
+                if f"{twin}_ref" not in ops_src:
+                    findings.append(self.make_finding(
+                        mod, fn,
+                        f"kernel '{name}': its twin '{twin}_ref' is not "
+                        f"dispatched in kernels/ops.py"))
+                # a test may pin the kernel directly, its ref twin, or
+                # the ops-level dispatch wrapper (the twin's base name)
+                referenced = any(
+                    re.search(rf"\b{re.escape(pat)}\b", test_src)
+                    for pat in (name, f"{twin}_ref", twin))
+                if not referenced:
+                    findings.append(self.make_finding(
+                        mod, fn,
+                        f"kernel '{name}' has no test referencing it or "
+                        f"its twin (bit-equality pin required)"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# REPRO002 — every emitted benchmark metric has a MetricSpec
+# ---------------------------------------------------------------------------
+
+_VALID_DIRECTIONS = {"higher", "lower"}
+#: non-metric keys the runner strips before validation (descriptive
+#: context strings; see repro.bench.runner)
+_NON_METRIC_KEYS = {"context"}
+
+
+def _decl_metric_names(dec: ast.Call) -> Optional[Set[str]]:
+    """Metric names a @benchmark(...) decorator declares; None when any
+    spec name is dynamic (f-string / comprehension) — the set is then
+    open and emitted keys cannot be checked statically."""
+    metrics_node = None
+    for kw in dec.keywords:
+        if kw.arg == "metrics":
+            metrics_node = kw.value
+    if metrics_node is None and len(dec.args) >= 3:  # positional form
+        metrics_node = dec.args[2]
+    if metrics_node is None:
+        return set()
+    if not isinstance(metrics_node, (ast.List, ast.Tuple)):
+        return None
+    names: Set[str] = set()
+    for el in metrics_node.elts:
+        if not (isinstance(el, ast.Call)
+                and call_name(el).endswith("MetricSpec")):
+            return None
+        name_node = el.args[0] if el.args else next(
+            (kw.value for kw in el.keywords if kw.arg == "name"), None)
+        if isinstance(name_node, ast.Constant) and isinstance(
+                name_node.value, str):
+            names.add(name_node.value)
+        else:
+            return None          # dynamic name: open set
+    return names
+
+
+@register_rule
+class BenchMetricSpec(ProjectRule):
+    """REPRO002 — benchmark return keys must be declared MetricSpecs."""
+
+    id = "REPRO002"
+    title = "benchmark emits a metric without a MetricSpec"
+    rationale = ("The perf ratchet is direction-aware: a metric without "
+                 "a declared MetricSpec (unit + better-direction) cannot "
+                 "be compared and silently escapes the CI ratchet.")
+    hint = ("declare the metric in the @benchmark(metrics=[...]) list "
+            "with its unit and direction")
+    paths = ("benchmarks/*.py",)
+
+    def check_project(self, modules: Dict[str, ParsedModule],
+                      context: Dict[str, ParsedModule]) -> List:
+        findings: List = []
+        for path, mod in modules.items():
+            if not self.applies_to(path):
+                continue
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.FunctionDef):
+                    continue
+                for dec in node.decorator_list:
+                    if not (isinstance(dec, ast.Call)
+                            and call_name(dec).endswith("benchmark")):
+                        continue
+                    declared = _decl_metric_names(dec)
+                    self._check_direction_literals(mod, dec, findings)
+                    if declared is None:
+                        continue     # dynamic spec list: runner validates
+                    for ret in [n for n in ast.walk(node)
+                                if isinstance(n, ast.Return)]:
+                        if not isinstance(ret.value, ast.Dict):
+                            continue
+                        for key in ret.value.keys:
+                            if (isinstance(key, ast.Constant)
+                                    and isinstance(key.value, str)
+                                    and key.value not in _NON_METRIC_KEYS
+                                    and key.value not in declared):
+                                findings.append(self.make_finding(
+                                    mod, key,
+                                    f"metric '{key.value}' is returned "
+                                    f"but has no MetricSpec in the "
+                                    f"@benchmark declaration"))
+        return findings
+
+    def _check_direction_literals(self, mod: ParsedModule, dec: ast.Call,
+                                  findings: List) -> None:
+        for call in [n for n in ast.walk(dec) if isinstance(n, ast.Call)
+                     and call_name(n).endswith("MetricSpec")]:
+            for kw in call.keywords:
+                if (kw.arg == "direction"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value not in _VALID_DIRECTIONS):
+                    findings.append(self.make_finding(
+                        mod, kw.value,
+                        f"MetricSpec direction {kw.value.value!r} is not "
+                        f"one of {sorted(_VALID_DIRECTIONS)}"))
+
+
+# ---------------------------------------------------------------------------
+# REPRO003 — wire/token accounting must stay exact-integer
+# ---------------------------------------------------------------------------
+
+_WIRE_FN = re.compile(r"wire_bytes|wire_mb")
+_TOKEN_TARGET = re.compile(
+    r"(^|_)(debt|token_budget|token_debt|tokens_owed|wire_bytes)s?$")
+
+
+def _target_root_name(node: ast.AST) -> str:
+    """Innermost identifier of an assignment target: ``self._debt[cid]``
+    -> '_debt', ``wire_bytes`` -> 'wire_bytes'."""
+    while isinstance(node, (ast.Subscript, ast.Starred)):
+        node = node.value
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _float_ops(value: ast.AST) -> List[ast.AST]:
+    """Div nodes / float constants / float() casts, one per line."""
+    out: List[ast.AST] = []
+    seen_lines: Set[int] = set()
+    for n in ast.walk(value):
+        hit = ((isinstance(n, ast.BinOp) and isinstance(n.op, ast.Div))
+               or (isinstance(n, ast.Constant)
+                   and isinstance(n.value, float))
+               or (isinstance(n, ast.Call) and call_name(n) == "float"))
+        line = getattr(n, "lineno", 0)
+        if hit and line not in seen_lines:
+            seen_lines.add(line)
+            out.append(n)
+    return out
+
+
+@register_rule
+class ExactWireAccounting(ModuleRule):
+    """REPRO003 — float arithmetic flowing into exact accounting."""
+
+    id = "REPRO003"
+    title = "float arithmetic in wire-bytes / token-budget accounting"
+    rationale = ("Wire bytes and token budgets are the paper's exact "
+                 "constraint ledgers (Eq. 5-8): true division or float "
+                 "constants make them drift; PR 7 fixed one such bug by "
+                 "hand and this rule keeps it fixed.")
+    hint = ("count with integer arithmetic (`*`, `//`, `-(-n // b)` for "
+            "ceil-div); convert to float only at the MB reporting edge")
+
+    def check_module(self, mod: ParsedModule) -> List:
+        raw: List = []
+        findings = raw
+        # (a) any function whose name smells like wire accounting
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.FunctionDef)
+                    and _WIRE_FN.search(node.name)):
+                for bad in self._body_float_ops(node):
+                    findings.append(self.make_finding(
+                        mod, bad,
+                        f"float arithmetic in wire accounting "
+                        f"function '{node.name}'"))
+        # (b) assignments to token/debt-ish names anywhere
+        for node in ast.walk(mod.tree):
+            targets: List[ast.AST] = []
+            value: Optional[ast.AST] = None
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AugAssign):
+                targets, value = [node.target], node.value
+            if value is None:
+                continue
+            for tgt in targets:
+                name = _target_root_name(tgt)
+                if _TOKEN_TARGET.search(name):
+                    for bad in _float_ops(value):
+                        findings.append(self.make_finding(
+                            mod, bad,
+                            f"float arithmetic assigned to exact "
+                            f"accounting name '{name}'"))
+        seen: Set[int] = set()
+        out: List = []
+        for f in raw:
+            if f.line not in seen:
+                seen.add(f.line)
+                out.append(f)
+        return out
+
+    @staticmethod
+    def _body_float_ops(fn: ast.FunctionDef) -> List[ast.AST]:
+        out: List[ast.AST] = []
+        seen: Set[int] = set()
+        for stmt in fn.body:
+            for bad in _float_ops(stmt):
+                line = getattr(bad, "lineno", 0)
+                if line not in seen:
+                    seen.add(line)
+                    out.append(bad)
+        return out

@@ -26,7 +26,7 @@ from __future__ import annotations
 import argparse
 import sys
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.bench.schema import MetricRecord, Snapshot
 
@@ -149,7 +149,7 @@ def compare_snapshots(baseline: Snapshot, fresh: Snapshot,
     return report
 
 
-def main(argv=None) -> int:
+def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         description="Diff a fresh benchmark snapshot against a committed "
                     "BENCH_<area>.json baseline; exit 1 on regressions.")

@@ -11,8 +11,8 @@ benchmark cannot silently drop a ratcheted metric.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Mapping, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Tuple
 
 from repro.bench.schema import DIRECTIONS
 
@@ -37,7 +37,7 @@ class MetricSpec:
     rtol: float = 0.25
     atol: float = 0.0
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.direction not in DIRECTIONS:
             raise ValueError(f"direction must be one of {DIRECTIONS}, "
                              f"got {self.direction!r}")
@@ -54,7 +54,7 @@ class Benchmark:
     presets: Mapping[str, Mapping]
     description: str = ""
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         names = [m.name for m in self.metrics]
         if len(set(names)) != len(names):
             raise ValueError(f"{self.name}: duplicate metric names {names}")
@@ -79,10 +79,11 @@ def register(bench: Benchmark) -> Benchmark:
     return bench
 
 
-def benchmark(name: str, area: str, metrics, presets,
-              description: str = ""):
+def benchmark(name: str, area: str, metrics: Iterable[MetricSpec],
+              presets: Mapping[str, Mapping],
+              description: str = "") -> Callable[[Callable], Callable]:
     """Decorator form: ``@benchmark("fl.executor", "fl_engine", ...)``."""
-    def deco(fn):
+    def deco(fn: Callable) -> Callable:
         register(Benchmark(name=name, area=area, fn=fn,
                            metrics=tuple(metrics), presets=dict(presets),
                            description=description))

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Callable, Dict, List, Optional, Union
 
 from repro.bench.registry import Benchmark, all_benchmarks
 from repro.bench.schema import (BenchmarkRecord, Fingerprint, MetricRecord,
@@ -23,8 +23,9 @@ class TimingStats:
     n: int
 
 
-def time_callable(fn, *args, warmup: int = 2, repeats: int = 10,
-                  block=None) -> TimingStats:
+def time_callable(fn: Callable, *args: object, warmup: int = 2,
+                  repeats: int = 10,
+                  block: Union[Callable, bool, None] = None) -> TimingStats:
     """Time ``fn(*args)`` with warmup calls excluded.
 
     ``block`` defaults to ``jax.block_until_ready`` so asynchronous
@@ -38,7 +39,7 @@ def time_callable(fn, *args, warmup: int = 2, repeats: int = 10,
         block = lambda x: x
     for _ in range(max(0, warmup)):
         block(fn(*args))
-    times = []
+    times: List[float] = []
     for _ in range(max(1, repeats)):
         t0 = time.perf_counter()
         block(fn(*args))
@@ -74,7 +75,7 @@ def run_benchmark(bench: Benchmark, scale: str = "smoke",
         raise ValueError(
             f"{bench.name}: metric mismatch — missing "
             f"{sorted(declared - got)}, undeclared {sorted(got - declared)}")
-    metrics = []
+    metrics: List[MetricRecord] = []
     for spec in bench.metrics:
         v = result[spec.name]
         if isinstance(v, TimingStats):
@@ -89,12 +90,13 @@ def run_benchmark(bench: Benchmark, scale: str = "smoke",
                            metrics=tuple(metrics), context=context)
 
 
-def run_area(area: str, scale: str = "smoke", log=None) -> Snapshot:
+def run_area(area: str, scale: str = "smoke",
+             log: Optional[Callable[[str], None]] = None) -> Snapshot:
     """Run every registered benchmark in an area into one snapshot."""
     benches = all_benchmarks(area)
     if not benches:
         raise KeyError(f"no benchmarks registered for area {area!r}")
-    records = []
+    records: List[BenchmarkRecord] = []
     for bench in benches:
         if log:
             log(f"[bench] {area}/{bench.name} @{scale} ...")

@@ -9,7 +9,6 @@ from __future__ import annotations
 import os
 from typing import Any
 
-import jax
 import msgpack
 import numpy as np
 

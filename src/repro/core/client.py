@@ -60,6 +60,9 @@ class ClientRunner:
         self.data = data
         self.resources = resources
         self.opt = make_optimizer(fl.optimizer, fl.lr, fl.weight_decay)
+        # jitted: eager zeros_like per client/round is an implicit h2d
+        # transfer (fill value) the steady-state guard pin disallows
+        self._opt_init = jax.jit(self.opt.init)
         self._grad_fn_cache = None
         self._masks = {}          # k -> mask tree
         self._active = {}         # k -> active param count
@@ -100,7 +103,7 @@ class ClientRunner:
         single host sync at the end (no per-microbatch ``float(loss)``)."""
         mask, active = self.mask_for(params, knobs.k)
         grad_fn = self.grad_fn()
-        opt_state = self.opt.init(params)
+        opt_state = self._opt_init(params)
         w = params
         losses = []
         for _ in range(knobs.s):
@@ -115,8 +118,11 @@ class ClientRunner:
                     grads_sum = jax.tree.map(lambda a, g: a + g, grads_sum,
                                              grads)
             if knobs.grad_accum > 1:
-                grads_sum = jax.tree.map(lambda g: g / knobs.grad_accum,
-                                         grads_sum)
+                # 0-d f32 divisor: dividing by the Python int would be an
+                # implicit h2d transfer per leaf under the transfer-guard
+                # pin; bit-identical (small ints are exact in f32).
+                accum = jnp.asarray(np.asarray(knobs.grad_accum, np.float32))
+                grads_sum = jax.tree.map(lambda g: g / accum, grads_sum)
             w, opt_state = self._apply(w, opt_state, grads_sum, mask)
 
         topk = self.fl.wire_topk

@@ -12,8 +12,6 @@ can swap rules per-name.
 from __future__ import annotations
 
 import re
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -180,7 +178,6 @@ def param_shardings(mesh, params_shapes, cfg: ModelConfig,
     vocab 256206 on a 16-way axis)."""
     dp, mp = RECIPES[recipe_name]
     recipe = _recipe(dp, mp)
-    flat = dict(_tree_paths(params_shapes))
 
     def shard_one(path, leaf):
         n_lead = 1 if "/units/" in path or path.endswith("units") or \
@@ -260,7 +257,6 @@ def cache_shardings(mesh, cache_spec_tree, cfg: ModelConfig,
         spec = spec + rest
         return NamedSharding(mesh, P(*spec))
 
-    flat = dict(_tree_paths(cache_spec_tree))
 
     def walk(tree, prefix=""):
         if isinstance(tree, dict):

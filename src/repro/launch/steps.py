@@ -8,15 +8,12 @@ mask tree (one executable for every k).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import InputShape, ModelConfig
+from repro.configs.base import InputShape
 from repro.models.zoo import Model
-from repro.optim import Optimizer, apply_updates, make_optimizer
+from repro.optim import Optimizer, apply_updates
 
 
 def make_train_step(model: Model, optimizer: Optimizer,

@@ -14,13 +14,11 @@ gates), so it is a lax.scan over time.
 from __future__ import annotations
 
 import math
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import dense_init, norm_apply
+from repro.models.layers import dense_init
 
 
 # ---------------------------------------------------------------------------
@@ -314,7 +312,6 @@ def slstm_apply_full(p, x, cfg: ModelConfig, state=None):
 
 
 def slstm_apply_decode(p, x, cache, cfg: ModelConfig):
-    b = x.shape[0]
     x_gates = x[:, 0] @ p["w_in"] + p["b_in"].astype(x.dtype)
     state = (cache["h"], cache["c"], cache["n"], cache["m"])
     state = _slstm_cell(p, x_gates, state, cfg.num_heads)

@@ -12,7 +12,7 @@ The layer stack is organised as ``prefix | scanned units | suffix``:
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,22 @@
+"""Clean JAX001 patterns: split-before-use, carry, fold_in per step."""
+import jax
+
+
+def double_sample(key):
+    k1, k2 = jax.random.split(key)
+    return jax.random.normal(k1, (4,)) + jax.random.normal(k2, (4,))
+
+
+def carry_loop(key, n):
+    total = 0.0
+    for _ in range(n):
+        key, sub = jax.random.split(key)   # carry pattern: key rebinds
+        total += jax.random.uniform(sub)
+    return total
+
+
+def fold_loop(key, n):
+    total = 0.0
+    for i in range(n):
+        total += jax.random.uniform(jax.random.fold_in(key, i))
+    return total

@@ -1,0 +1,17 @@
+"""Clean JAX002 patterns: hashable scalars/tuples as static args."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def scaled(x, factor):
+    return x * factor
+
+
+step = jax.jit(lambda x, mode: x, static_argnames=("mode",))
+
+
+def run(x):
+    y = scaled(x, 3)                      # int: hashable, fine
+    return step(y, mode="fast")           # str: hashable, fine

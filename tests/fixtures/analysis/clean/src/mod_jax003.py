@@ -1,0 +1,18 @@
+"""Clean JAX003 patterns: definitions at import, execution in main()."""
+import jax
+import jax.numpy as jnp
+
+softplus = jax.jit(lambda x: jnp.logaddexp(x, 0.0))  # defining-only: fine
+
+
+def make_table():
+    return jnp.arange(16)                 # inside a function: fine
+
+
+def main():
+    print(softplus(make_table()))
+
+
+if __name__ == "__main__":
+    key = jax.random.PRNGKey(0)           # main guard: fine
+    main()

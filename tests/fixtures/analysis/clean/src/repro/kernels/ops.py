@@ -1,0 +1,7 @@
+"""Dispatch point for the clean fixture kernels."""
+from repro.kernels.ref import paired_kernel_ref
+from repro.kernels.wire import paired_kernel
+
+
+def paired(x, use_pallas=False):
+    return paired_kernel(x) if use_pallas else paired_kernel_ref(x)

@@ -1,0 +1,5 @@
+"""Clean REPRO001 pattern: kernel with twin, dispatch, and test."""
+
+
+def paired_kernel(x):
+    return x

@@ -1,0 +1,9 @@
+"""Bit-equality pin for the clean fixture kernel pair."""
+from repro.kernels.ops import paired
+from repro.kernels.ref import paired_kernel_ref
+from repro.kernels.wire import paired_kernel
+
+
+def test_paired_kernel_matches_ref():
+    assert paired_kernel(1.0) == paired_kernel_ref(1.0)
+    assert paired(1.0, use_pallas=True) == paired(1.0, use_pallas=False)

@@ -1,0 +1,23 @@
+"""Seeded JAX001 violations: PRNG keys consumed twice / after split."""
+import jax
+
+
+def double_sample(seed):
+    k = jax.random.PRNGKey(seed)
+    a = jax.random.normal(k, (4,))
+    b = jax.random.normal(k, (4,))        # JAX001: key consumed twice
+    return a + b
+
+
+def use_after_split(key):
+    k1, k2 = jax.random.split(key)
+    noise = jax.random.normal(key, (2,))  # JAX001: parent used after split
+    return noise + jax.random.normal(k1, (2,)) + jax.random.normal(k2, (2,))
+
+
+def loop_reuse(seed, n):
+    k = jax.random.PRNGKey(seed)
+    total = 0.0
+    for _ in range(n):
+        total += jax.random.uniform(k)    # JAX001: same key every iteration
+    return total

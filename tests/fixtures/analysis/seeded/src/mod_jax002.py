@@ -1,0 +1,17 @@
+"""Seeded JAX002 violations: unhashable values at static jit args."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def scaled(x, cfg):
+    return x * cfg[0]
+
+
+step = jax.jit(lambda x, opts: x, static_argnames=("opts",))
+
+
+def run(x):
+    y = scaled(x, [1, 2, 3])              # JAX002: list at static position
+    return step(y, opts={"lr": 0.1})      # JAX002: dict at static name

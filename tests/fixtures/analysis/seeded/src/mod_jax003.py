@@ -1,0 +1,10 @@
+"""Seeded JAX003 violations: device computation at import time."""
+import jax
+import jax.numpy as jnp
+
+TABLE = jnp.arange(16)                    # JAX003: import-time device work
+KEY = jax.random.PRNGKey(0)               # JAX003: import-time device work
+
+
+def lookup(i):
+    return TABLE[i]

@@ -1,0 +1,9 @@
+"""Seeded JAX004 violation: per-client Python loop in the engine."""
+
+
+def aggregate_round(clients, deltas):
+    total = None
+    for client in clients:                # JAX004: per-client Python loop
+        d = deltas[client]
+        total = d if total is None else total + d
+    return total

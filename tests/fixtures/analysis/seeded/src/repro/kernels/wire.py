@@ -1,0 +1,5 @@
+"""Seeded REPRO001 violation: a public kernel with no ref twin."""
+
+
+def orphan_kernel(x):
+    return x

@@ -1,0 +1,169 @@
+"""Tests for the repro.analysis static-analysis subsystem: the rule
+engine over seeded-violation / clean fixture trees, baseline
+round-tripping, CLI exit codes, and the repo-level zero-new-findings
+policy (see tests/README.md)."""
+import json
+import os
+import shutil
+
+import pytest
+
+from repro.analysis import (Analyzer, Baseline, Finding, rule_ids,
+                            run_analysis)
+from repro.analysis.cli import main as cli_main
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+SEEDED = os.path.join(HERE, "fixtures", "analysis", "seeded")
+CLEAN = os.path.join(HERE, "fixtures", "analysis", "clean")
+
+ALL_RULES = ("JAX001", "JAX002", "JAX003", "JAX004",
+             "REPRO001", "REPRO002", "REPRO003")
+
+
+@pytest.fixture(scope="module")
+def seeded_result():
+    return run_analysis(SEEDED)
+
+
+@pytest.fixture(scope="module")
+def clean_result():
+    return run_analysis(CLEAN)
+
+
+# ---------------------------------------------------------------------------
+# rule engine over the fixture trees
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_rules():
+    assert set(rule_ids()) == set(ALL_RULES)
+
+
+def test_every_rule_fires_on_seeded_tree(seeded_result):
+    by_rule = seeded_result.by_rule()
+    assert set(by_rule) == set(ALL_RULES)
+
+
+def test_clean_tree_is_clean(clean_result):
+    assert clean_result.findings == []
+
+
+@pytest.mark.parametrize("rule,path,needle", [
+    ("JAX001", "src/mod_jax001.py", "consumed twice"),
+    ("JAX001", "src/mod_jax001.py", "used after jax.random.split"),
+    ("JAX001", "src/mod_jax001.py", "inside a loop"),
+    ("JAX002", "src/mod_jax002.py", "declared static"),
+    ("JAX003", "src/mod_jax003.py", "import time"),
+    ("JAX004", "src/repro/fl/engine.py", "per-client Python loop"),
+    ("REPRO001", "src/repro/kernels/wire.py", "no pure-jnp twin"),
+    ("REPRO002", "benchmarks/bench_bad.py", "no MetricSpec"),
+    ("REPRO002", "benchmarks/bench_bad.py", "direction"),
+    ("REPRO003", "src/mod_repro003.py", "wire accounting"),
+    ("REPRO003", "src/mod_repro003.py", "token_budget"),
+])
+def test_seeded_violation_is_found(seeded_result, rule, path, needle):
+    hits = [f for f in seeded_result.findings
+            if f.rule == rule and f.path == path and needle in f.message]
+    assert hits, (f"{rule} should flag {path} with {needle!r}; got "
+                  f"{[f.format() for f in seeded_result.findings]}")
+
+
+def test_findings_carry_location_and_hint(seeded_result):
+    for f in seeded_result.findings:
+        assert f.line >= 1 and f.path and f.hint
+        assert f"{f.path}:{f.line}" in f.format()
+
+
+def test_rule_filtering():
+    only = run_analysis(SEEDED, rules=[
+        r for r in Analyzer(SEEDED).rules if r.id == "JAX003"])
+    assert {f.rule for f in only.findings} == {"JAX003"}
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_roundtrip(tmp_path, seeded_result):
+    path = str(tmp_path / "base.json")
+    Baseline.from_findings(seeded_result.findings).save(path)
+    base = Baseline.load(path)
+    new, suppressed, stale = base.diff(seeded_result.findings)
+    assert new == [] and stale == []
+    assert len(suppressed) == len(seeded_result.findings)
+
+
+def test_baseline_flags_new_and_stale(tmp_path, seeded_result):
+    findings = list(seeded_result.findings)
+    held_out, rest = findings[0], findings[1:]
+    base = Baseline.from_findings(rest)
+    new, suppressed, stale = base.diff(findings)
+    assert [f.fingerprint for f in new] == [held_out.fingerprint]
+    # a baseline entry with no matching finding is stale
+    extra = Finding(rule="JAX001", path="src/gone.py", line=1,
+                    message="was fixed", hint="", snippet="x = 1")
+    base2 = Baseline.from_findings(rest + [extra])
+    _, _, stale2 = base2.diff(rest)
+    assert [e["fingerprint"] for e in stale2] == [extra.fingerprint]
+
+
+def test_fingerprint_survives_line_drift():
+    a = Finding(rule="R", path="p.py", line=3, message="m", hint="",
+                snippet="x = jnp.ones(4)")
+    b = Finding(rule="R", path="p.py", line=300, message="m", hint="",
+                snippet="x = jnp.ones(4)")
+    c = Finding(rule="R", path="p.py", line=3, message="m", hint="",
+                snippet="y = jnp.ones(4)")
+    assert a.fingerprint == b.fingerprint != c.fingerprint
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_exit_codes(capsys):
+    assert cli_main(["--root", SEEDED]) == 1
+    assert cli_main(["--root", CLEAN]) == 0
+    assert cli_main(["--root", SEEDED, "--rules", "NOPE"]) == 2
+    assert cli_main(["--list-rules"]) == 0
+    capsys.readouterr()
+
+
+def test_cli_json_output(capsys):
+    assert cli_main(["--root", SEEDED, "--json"]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["new"] and not payload["suppressed"]
+    assert {f["rule"] for f in payload["new"]} == set(ALL_RULES)
+
+
+def test_cli_update_baseline_then_clean(tmp_path, capsys):
+    root = str(tmp_path / "tree")
+    shutil.copytree(SEEDED, root)
+    assert cli_main(["--root", root]) == 1
+    assert cli_main(["--root", root, "--update-baseline"]) == 0
+    assert cli_main(["--root", root]) == 0          # all suppressed now
+    out = capsys.readouterr().out
+    assert "suppressed by baseline" in out
+    # fixing a violation makes its baseline entry stale -> exit 1
+    eng = os.path.join(root, "src", "repro", "fl", "engine.py")
+    with open(eng, "w") as f:
+        f.write("def aggregate_round(stacked):\n    return stacked.sum(0)\n")
+    assert cli_main(["--root", root]) == 1
+    assert "STALE" in capsys.readouterr().out
+    assert cli_main(["--root", root, "--update-baseline"]) == 0
+    assert cli_main(["--root", root]) == 0
+
+
+# ---------------------------------------------------------------------------
+# the repo itself: the zero-new-findings policy
+# ---------------------------------------------------------------------------
+
+
+def test_repo_is_clean_under_committed_baseline():
+    """CI's analysis gate, as a test: every finding in the tree is owned
+    by the committed ANALYSIS_BASELINE.json — new code adds nothing."""
+    assert os.path.exists(os.path.join(REPO, "ANALYSIS_BASELINE.json"))
+    assert cli_main(["--root", REPO]) == 0

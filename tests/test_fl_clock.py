@@ -27,7 +27,7 @@ from repro.constraints import dual_config_for
 from repro.data import load_corpus
 from repro.fl import (CAFLL, DeadlineAwareKnobPolicy, DeadlineStragglers,
                       EventQueue, FedBuffAggregator, FederatedEngine,
-                      FleetClass, FleetDynamics, KnobRoundTime, NoStragglers,
+                      FleetClass, FleetDynamics, KnobRoundTime,
                       RoundCallback, SimClock, UniformSampler, make_fleet,
                       make_round_time, uniform_fleet)
 from repro.fl.device import ClientInfo, DeviceProfile

@@ -12,9 +12,9 @@ from repro.configs import get_config, get_fl_config
 from repro.core import aggregation
 from repro.core.policy import Knobs, fedavg_knobs
 from repro.data import load_corpus
-from repro.fl import (AlwaysAvailable, BernoulliChurn, ClientInfo,
+from repro.fl import (BernoulliChurn, ClientInfo,
                       DeadlineStragglers, DeviceProfile, FederatedEngine,
-                      FleetDynamics, FullParticipation, NoStragglers,
+                      FleetDynamics, FullParticipation,
                       PeriodicAvailability, ResourceAwareSampler,
                       RoundCallback, RoundRobinSampler, UniformSampler,
                       make_dynamics)
@@ -88,7 +88,6 @@ def test_uniform_sampler_matches_legacy_stream():
 
 
 def test_round_robin_visits_everyone():
-    fl = get_fl_config().replace(num_clients=6, clients_per_round=2)
     clients = _fleet(6)
     dyn = FleetDynamics(sampler=RoundRobinSampler(2))
     trace = _trace(dyn, clients, seed=0, rounds=3)
@@ -191,7 +190,6 @@ def test_dropout_renormalization_matches_survivor_mean():
 
 
 def test_token_debt_carries_to_next_participation():
-    fl = get_fl_config()
     dyn = FleetDynamics(sampler=FullParticipation(), max_carry_accum=4)
     dyn.reset()
     clients = _fleet(2)

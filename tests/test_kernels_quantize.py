@@ -5,7 +5,6 @@ trees produce (scalars, odd tails, non-tile-multiples), mid-tread
 quantization-error bounds, the ``qdq(0) == 0`` zero-preservation
 regression, and hypothesis property tests (skipped when hypothesis is
 not installed — the backend/shape sweeps still run)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

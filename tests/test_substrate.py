@@ -1,5 +1,4 @@
 """Substrate tests: data pipeline, optimizers, aggregation, specs."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
