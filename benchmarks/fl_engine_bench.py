@@ -330,6 +330,34 @@ def controller_bench(params):
     return out
 
 
+@benchmark(
+    "fl.memory_static", AREA,
+    metrics=[MetricSpec("undonated_peak_bytes", unit="B",
+                        direction="lower", rtol=0.05),
+             MetricSpec("donated_peak_bytes", unit="B",
+                        direction="lower", rtol=0.05),
+             MetricSpec("donation_saving", unit="x", direction="higher",
+                        rtol=0.05)],
+    presets={"full": {}, "smoke": {}, "tiny": {}},
+    description="static (jaxpr cost model) peak of the client update "
+                "step with vs without opt-state/grad donation — the "
+                "PR-9 donation win, ratcheted so it cannot silently "
+                "regress")
+def memory_static_bench(params):
+    from repro.analysis.trace import cost_of_jaxpr, traced_entries
+
+    t = {x.entry.name: x for x in traced_entries()}["fl.client_update_step"]
+    undonated = cost_of_jaxpr(t.closed_jaxpr).peak_bytes
+    donated = t.cost.peak_bytes
+    return {
+        "context": {"entry": t.entry.name,
+                    "aliased": f"{t.aliased_outputs}/{t.donatable_leaves}"},
+        "undonated_peak_bytes": float(undonated),
+        "donated_peak_bytes": float(donated),
+        "donation_saving": undonated / donated,
+    }
+
+
 def main(argv=None):
     from benchmarks.common import emit_snapshot, run_area_cli
     emit_snapshot(run_area_cli(AREA, argv))

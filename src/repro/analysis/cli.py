@@ -11,11 +11,12 @@ import argparse
 import json
 import os
 import sys
-from typing import Optional, Sequence
+from typing import Any, List, Optional, Sequence, Tuple
 
 from repro.analysis.baseline import DEFAULT_BASELINE, Baseline
 from repro.analysis.engine import (DEFAULT_CODE_PATHS, Analyzer,
                                    default_rules)
+from repro.analysis.findings import assign_occurrences
 
 EXIT_CLEAN = 0
 EXIT_FINDINGS = 1
@@ -43,10 +44,16 @@ def build_parser() -> argparse.ArgumentParser:
                    help="print rule metadata and exit")
     p.add_argument("--json", action="store_true", dest="as_json",
                    help="machine-readable JSON on stdout")
+    p.add_argument("--trace", action="store_true",
+                   help="also trace the registered entry points to "
+                        "jaxprs, run the TRACE rules and the static "
+                        "memory gate, and diff TRACE_BUDGETS.json "
+                        "(--update-baseline re-records the table)")
     return p
 
 
-def _select_rules(spec: Optional[str]):
+def _select_rules(spec: Optional[str]
+                  ) -> Tuple[Optional[List[Any]], Optional[str]]:
     rules = default_rules()
     if spec is None:
         return rules, None
@@ -78,6 +85,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if paths:
         kwargs["code_paths"] = paths
     result = Analyzer(args.root, **kwargs).run()
+    findings = list(result.findings)
+    rules_run = list(result.rules_run)
+
+    trace_report = None
+    if args.trace:
+        # lazy: tracing imports jax and the model stack
+        from repro.analysis.trace import run_trace
+        trace_report = run_trace(args.root,
+                                 update=args.update_baseline)
+        findings = assign_occurrences(findings + trace_report.findings)
+        rules_run += trace_report.rules_run
 
     baseline_path = args.baseline
     if baseline_path is None and os.path.exists(
@@ -91,25 +109,38 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                       "scanning explicit paths", file=sys.stderr)
                 return EXIT_USAGE
             baseline_path = os.path.join(args.root, DEFAULT_BASELINE)
-        Baseline.from_findings(result.findings).save(baseline_path)
+        Baseline.from_findings(findings).save(baseline_path)
         print(f"baseline written: {baseline_path} "
-              f"({len(result.findings)} findings)")
+              f"({len(findings)} findings)")
+        if trace_report is not None:
+            from repro.analysis.trace import DEFAULT_TRACE_TABLE
+            print(f"trace table written: "
+                  f"{os.path.join(args.root, DEFAULT_TRACE_TABLE)} "
+                  f"({len(trace_report.traced)} entries)")
         return EXIT_CLEAN
 
     if baseline_path is not None:
         base = Baseline.load(baseline_path)
-        new, suppressed, stale = base.diff(result.findings)
+        new, suppressed, stale = base.diff(findings)
     else:
-        new, suppressed, stale = list(result.findings), [], []
+        new, suppressed, stale = list(findings), [], []
+    problems = list(trace_report.problems) if trace_report else []
 
     if args.as_json:
-        print(json.dumps({
+        payload = {
             "files_scanned": result.files_scanned,
-            "rules": result.rules_run,
+            "rules": rules_run,
             "new": [f.to_json() for f in new],
             "suppressed": [f.to_json() for f in suppressed],
             "stale_baseline": stale,
-        }, indent=2))
+        }
+        if trace_report is not None:
+            payload["trace"] = {
+                "entries": trace_report.rows_json(),
+                "gate": [r.to_json() for r in trace_report.gate],
+                "problems": problems,
+            }
+        print(json.dumps(payload, indent=2))
     else:
         for f in new:
             print(f.format())
@@ -117,10 +148,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             print(f"{e['path']}:{e['line']}: STALE baseline entry for "
                   f"{e['rule']} (finding no longer exists; run "
                   f"--update-baseline to drop it)")
+        if trace_report is not None:
+            from repro.analysis.trace import format_report
+            print()
+            print(format_report(trace_report))
+            for pr in problems:
+                print(f"TRACE PROBLEM: {pr}")
         print(f"\n{result.files_scanned} files, "
-              f"{len(result.rules_run)} rules: "
+              f"{len(rules_run)} rules: "
               f"{len(new)} new finding(s), {len(suppressed)} suppressed "
               f"by baseline, {len(stale)} stale baseline entr"
-              f"{'y' if len(stale) == 1 else 'ies'}")
+              f"{'y' if len(stale) == 1 else 'ies'}"
+              + (f", {len(problems)} trace problem(s)"
+                 if trace_report is not None else ""))
 
-    return EXIT_FINDINGS if (new or stale) else EXIT_CLEAN
+    return EXIT_FINDINGS if (new or stale or problems) else EXIT_CLEAN

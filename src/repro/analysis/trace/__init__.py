@@ -1,0 +1,41 @@
+"""repro.analysis.trace — jaxpr-level static analysis.
+
+Where the AST half of ``repro.analysis`` reads source text, this half
+traces registered entry points (client update step, batched executor
+body, aggregator combines, the wire kernels, the dual update) to
+jaxprs under declared example shapes, runs a static cost model over
+them (peak live bytes via linear-scan liveness, flops, host-transfer
+bytes), evaluates the TRACE rule family on the traced IR, and gates
+the peak-memory estimate against ``Budgets.memory`` through the
+Constraint API — a pre-run static feasibility check.
+
+    PYTHONPATH=src python -m repro.analysis --trace [--json]
+
+The committed ``TRACE_BUDGETS.json`` is the cost table the CI ratchet
+diffs against; ``--trace --update-baseline`` re-records it (and folds
+any TRACE findings into ``ANALYSIS_BASELINE.json``).
+"""
+from __future__ import annotations
+
+from repro.analysis.trace.cost import (JaxprCost, aval_bytes,
+                                       cost_of_jaxpr, iter_eqns,
+                                       unwrap_pjit)
+from repro.analysis.trace.gate import (DEFAULT_TRACE_TABLE, GateRow,
+                                       TraceReport, format_report,
+                                       memory_gate, run_trace)
+from repro.analysis.trace.registry import (EntryPoint, TracedEntry,
+                                           charlm_trace_setup,
+                                           collect_entry_points,
+                                           trace_entry, traced_entries)
+from repro.analysis.trace.rules import (TraceRule, register_trace_rule,
+                                        run_trace_rules, trace_rule_ids,
+                                        trace_rules)
+
+__all__ = [
+    "DEFAULT_TRACE_TABLE", "EntryPoint", "GateRow", "JaxprCost",
+    "TraceReport", "TraceRule", "TracedEntry", "aval_bytes",
+    "charlm_trace_setup", "collect_entry_points", "cost_of_jaxpr",
+    "format_report", "iter_eqns", "memory_gate", "register_trace_rule",
+    "run_trace", "run_trace_rules", "trace_entry", "trace_rule_ids",
+    "trace_rules", "traced_entries", "unwrap_pjit",
+]

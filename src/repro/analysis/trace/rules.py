@@ -1,0 +1,248 @@
+"""TRACE rules: discipline checks evaluated on traced jaxprs.
+
+Where the AST rules (``rules_jax`` / ``rules_repro``) see source text,
+these see what XLA will actually be asked to materialize. Findings flow
+through the same ``Finding``/baseline machinery: a finding anchors at
+the entry point's *declaration* site and fingerprints on a stable
+``trace:<entry>:<detail>`` snippet, so line drift in the traced code
+never churns the committed baseline.
+
+TRACE001  dtype promotion — a 64-bit value appears in a jaxpr whose
+          inputs are all narrower (f32->f64 / weak-type widening), or
+          reaches an entry output / wire buffer.
+TRACE002  missed buffer donation — an update-style entry declares
+          donatable params/opt-state args, but the compiled artifact
+          aliases fewer output buffers than those args have leaves.
+TRACE003  dense per-client materialization — an aggregation combine
+          produces a single value of >= cohort * max-client-leaf bytes
+          (the O(C*P) stack the incremental combine exists to avoid).
+TRACE004  host callbacks / transfers inside jit — callback or
+          device_put primitives in a steady-state traced entry.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Type
+
+from repro.analysis.findings import Finding
+from repro.analysis.trace.cost import (TRANSFER_PRIMITIVES, aval_bytes,
+                                       iter_eqns)
+from repro.analysis.trace.registry import TracedEntry
+
+_WIDE_DTYPES = {"float64", "int64", "uint64", "complex128"}
+
+#: staging a handful of scalars (pre-staged combine weights, step
+#: counts) is the *endorsed* pattern — TRACE004 only flags device_put
+#: once the moved bytes stop looking like scalars; callbacks always fire
+DEVICE_PUT_MIN_BYTES = 4096
+
+
+class TraceRule:
+    """Base: metadata + one ``check`` over a traced entry."""
+
+    id: str = ""
+    title: str = ""
+    rationale: str = ""
+    hint: str = ""
+
+    def check(self, traced: TracedEntry) -> List[Finding]:
+        raise NotImplementedError
+
+    def finding(self, traced: TracedEntry, detail: str,
+                message: str) -> Finding:
+        ep = traced.entry
+        return Finding(rule=self.id, path=ep.path, line=ep.line,
+                       message=f"[{ep.name}] {message}", hint=self.hint,
+                       snippet=f"trace:{ep.name}:{detail}")
+
+
+_TRACE_RULES: Dict[str, Type[TraceRule]] = {}
+
+
+def register_trace_rule(cls: Type[TraceRule]) -> Type[TraceRule]:
+    assert cls.id, f"{cls.__name__} needs a rule id"
+    _TRACE_RULES[cls.id] = cls
+    return cls
+
+
+def trace_rules() -> List[TraceRule]:
+    return [cls() for _, cls in sorted(_TRACE_RULES.items())]
+
+
+def trace_rule_ids() -> List[str]:
+    return sorted(_TRACE_RULES)
+
+
+def run_trace_rules(traced: Sequence[TracedEntry],
+                    rules: Sequence[TraceRule] = ()) -> List[Finding]:
+    """Every rule over every traced entry, honoring per-entry allows."""
+    ruleset = list(rules) if rules else trace_rules()
+    findings: List[Finding] = []
+    for t in traced:
+        for rule in ruleset:
+            if rule.id in t.entry.allow:
+                continue
+            findings.extend(rule.check(t))
+    return findings
+
+
+def _dtype_name(aval: object) -> str:
+    dt = getattr(aval, "dtype", None)
+    return str(dt) if dt is not None else ""
+
+
+@register_trace_rule
+class DtypePromotion(TraceRule):
+    """TRACE001 — widening to 64-bit inside a traced entry."""
+
+    id = "TRACE001"
+    title = "dtype promotion to 64-bit in traced entry"
+    rationale = ("The wire and update paths are specified in f32 (and "
+                 "narrower wire formats): a silent f64/i64 promotion "
+                 "doubles the very bytes the memory and comm budgets "
+                 "meter, and usually enters through a weak-typed host "
+                 "scalar.")
+    hint = ("pin the scalar/array dtype at the source (jnp.float32, "
+            "np.asarray(..., np.float32)); keep x64 mode off the hot "
+            "path")
+
+    def check(self, traced: TracedEntry) -> List[Finding]:
+        out: List[Finding] = []
+        seen: set = set()
+        for eqn, _ in iter_eqns(traced.closed_jaxpr):
+            outs_wide = [v for v in eqn.outvars
+                         if _dtype_name(v.aval) in _WIDE_DTYPES]
+            if not outs_wide:
+                continue
+            ins_wide = any(_dtype_name(v.aval) in _WIDE_DTYPES
+                           for v in eqn.invars)
+            if ins_wide:
+                continue                   # already wide upstream
+            detail = (f"widen:{eqn.primitive.name}:"
+                      f"{_dtype_name(outs_wide[0].aval)}")
+            if detail in seen:
+                continue
+            seen.add(detail)
+            out.append(self.finding(
+                traced, detail,
+                f"'{eqn.primitive.name}' widens to "
+                f"{_dtype_name(outs_wide[0].aval)} from narrower inputs"))
+        jaxpr = traced.closed_jaxpr.jaxpr
+        wide_out = [v for v in jaxpr.outvars
+                    if _dtype_name(getattr(v, 'aval', None))
+                    in _WIDE_DTYPES]
+        wide_in = any(_dtype_name(v.aval) in _WIDE_DTYPES
+                      for v in jaxpr.invars)
+        if wide_out and not wide_in:
+            out.append(self.finding(
+                traced, f"wide-output:{_dtype_name(wide_out[0].aval)}",
+                f"entry output is {_dtype_name(wide_out[0].aval)} but "
+                f"every input is narrower (promotion reaches the "
+                f"output/wire buffer)"))
+        return out
+
+
+@register_trace_rule
+class MissedDonation(TraceRule):
+    """TRACE002 — declared-donatable buffers not actually aliased."""
+
+    id = "TRACE002"
+    title = "missed buffer donation in jitted update step"
+    rationale = ("An update step that rebinds params/opt-state every "
+                 "call can donate those buffers; without donation the "
+                 "old and new copies are live simultaneously and the "
+                 "client's peak memory roughly doubles on its largest "
+                 "state — the exact quantity Budgets.memory gates.")
+    hint = ("jit with donate_argnums=(...) covering the rebound "
+            "state args (and keep shared/reused args, e.g. params "
+            "under an outer loop that still reads them, undonated)")
+
+    def check(self, traced: TracedEntry) -> List[Finding]:
+        ep = traced.entry
+        if not ep.donatable or traced.aliased_outputs < 0:
+            return []
+        expected = traced.donatable_leaves
+        actual = traced.aliased_outputs
+        if actual >= expected:
+            return []
+        return [self.finding(
+            traced, "missed-donation",
+            f"only {actual} of {expected} declared-donatable buffers "
+            f"are aliased in the compiled step (donate_argnums missing "
+            f"or ineffective)")]
+
+
+@register_trace_rule
+class DenseCohortMaterialization(TraceRule):
+    """TRACE003 — O(C*P) value materialized inside an aggregation."""
+
+    id = "TRACE003"
+    title = "dense per-client materialization in aggregation"
+    rationale = ("Server combines must stay O(P): stacking the cohort "
+                 "into one (C, ...) array scales server peak memory "
+                 "with cohort size, which is how aggregation quietly "
+                 "busts the memory budget at exactly the moment the "
+                 "paper scales clients.")
+    hint = ("fold incrementally (weighted add per client, as "
+            "core.aggregation.aggregate does) instead of "
+            "stacking/concatenating the cohort axis")
+
+    def check(self, traced: TracedEntry) -> List[Finding]:
+        ep = traced.entry
+        if ep.cohort < 2 or traced.unit_bytes <= 0:
+            return []
+        threshold = ep.cohort * traced.unit_bytes
+        out: List[Finding] = []
+        seen: set = set()
+        for eqn, _ in iter_eqns(traced.closed_jaxpr):
+            for v in eqn.outvars:
+                if aval_bytes(v.aval) >= threshold:
+                    detail = f"dense-cohort:{eqn.primitive.name}"
+                    if detail in seen:
+                        continue
+                    seen.add(detail)
+                    out.append(self.finding(
+                        traced, detail,
+                        f"'{eqn.primitive.name}' materializes "
+                        f"{aval_bytes(v.aval)} B >= cohort({ep.cohort}) "
+                        f"* largest client leaf ({traced.unit_bytes} B)"))
+        return out
+
+
+@register_trace_rule
+class HostCallbackInJit(TraceRule):
+    """TRACE004 — host boundary crossings inside a traced entry."""
+
+    id = "TRACE004"
+    title = "host callback / transfer inside jit"
+    rationale = ("A callback or device_put inside a steady-state jitted "
+                 "step serializes the device stream against the host "
+                 "every call — the round-loop transfer-guard pin "
+                 "(repro.analysis.runtime) bans the same thing "
+                 "dynamically; this catches it before a run.")
+    hint = ("hoist the host work out of the jitted step; stage scalars "
+            "as device arrays once (see core.aggregation's pre-staged "
+            "weights) and keep jax.debug.* out of committed hot paths")
+
+    def check(self, traced: TracedEntry) -> List[Finding]:
+        out: List[Finding] = []
+        seen: set = set()
+        for eqn, _ in iter_eqns(traced.closed_jaxpr):
+            name = eqn.primitive.name
+            if name not in TRANSFER_PRIMITIVES or name in seen:
+                continue
+            bytes_ = sum(aval_bytes(v.aval) for v in
+                         list(eqn.invars) + list(eqn.outvars)
+                         if not isinstance(v, (int, float))
+                         and hasattr(v, "aval"))
+            if name == "device_put" and bytes_ < DEVICE_PUT_MIN_BYTES:
+                continue          # scalar pre-staging, the endorsed idiom
+            seen.add(name)
+            out.append(self.finding(
+                traced, f"host-boundary:{name}",
+                f"'{name}' crosses the host boundary inside the "
+                f"traced entry ({bytes_} B per call)"))
+        return out
+
+
+__all__ = ["TraceRule", "register_trace_rule", "trace_rules",
+           "trace_rule_ids", "run_trace_rules"]

@@ -26,7 +26,10 @@ steady-state pressure.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterable, Mapping, Optional, Union
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Union
+
+import jax
+import jax.numpy as jnp
 
 from repro.configs.base import DualConfig
 from repro.core.duals import deadzone
@@ -171,6 +174,49 @@ class PIController(DualController):
 
     def state_snapshot(self) -> Dict[str, Any]:
         return {"name": self.name, "integrals": dict(self._integral)}
+
+
+def dual_step_jnp(lam: jax.Array, ratio: jax.Array, eta: float,
+                  delta: float, lambda_max: float) -> jax.Array:
+    """Traceable (vectorized) twin of ``DeadzoneSubgradient.step``:
+    the paper's Eq. 4 over a whole constraint stack at once.
+
+        lambda <- clip(lambda + eta * dz(ratio), 0, lambda_max)
+
+    Matches the scalar law elementwise (pinned by tests); being pure
+    jnp it is also the entry the trace analysis prices — the scalar
+    ``deadzone`` is a Python branch and cannot be traced."""
+    x = ratio - 1.0
+    dz = jnp.where(jnp.abs(x) <= delta, jnp.zeros_like(x), x)
+    return jnp.clip(lam + eta * dz, 0.0, lambda_max)
+
+
+# ---------------------------------------------------------------------------
+# trace-analysis entry points (repro.analysis.trace)
+# ---------------------------------------------------------------------------
+
+
+def _dual_build() -> Any:
+    from repro.configs import get_fl_config
+    cfg = get_fl_config().duals
+
+    def fn(lam: jax.Array, ratio: jax.Array) -> jax.Array:
+        return dual_step_jnp(lam, ratio, cfg.eta, cfg.deadzone,
+                             cfg.lambda_max)
+
+    sds = jax.ShapeDtypeStruct((4,), jnp.float32)
+    return fn, (sds, sds)
+
+
+def trace_entry_points() -> List[Any]:
+    """Declared traceable surface: one dual ascent step over the
+    paper's four multipliers."""
+    from repro.analysis.trace.registry import EntryPoint
+    return [EntryPoint(
+        name="constraints.dual_update",
+        path="src/repro/constraints/controllers.py", line=199,
+        build=_dual_build,
+        note="Eq. 4 dead-zoned dual ascent, 4 constraints")]
 
 
 CONTROLLERS = ("deadzone", "adaptive", "pi")

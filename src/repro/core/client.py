@@ -11,8 +11,9 @@ simulated client; the ``repro.fl`` executors drive it — sequentially
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +22,7 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.core import compression, freezing
 from repro.core.policy import Knobs
-from repro.core.resources import BYTES_PER_PARAM, ResourceModel
+from repro.core.resources import ResourceModel
 from repro.data.federated import FederatedData
 from repro.models.zoo import Model
 from repro.optim import make_optimizer
@@ -67,7 +68,12 @@ class ClientRunner:
         self._masks = {}          # k -> mask tree
         self._active = {}         # k -> active param count
 
-        @jax.jit
+        # opt-state and grads are rebound every step, so their buffers
+        # are donated (in-place update; halves the step's transient
+        # peak). params must NOT be donated: the first step reads the
+        # caller's round-global tree, which finalize_delta and every
+        # other client still need.
+        @functools.partial(jax.jit, donate_argnums=(1, 2))
         def _apply(params, opt_state, grads, mask):
             return apply_masked_update(self.opt, params, opt_state, grads,
                                        mask)
@@ -161,20 +167,111 @@ def finalize_delta(w, params, mask, q: int, topk=None):
     return freezing.apply_mask(delta, mask)
 
 
+#: one accounting unit is 2**-11 byte: the finest grain the wire
+#: formats produce (1/2048 byte/param for the per-block scale share),
+#: so per-param costs below are exact integers and the final scale-out
+#: is a dyadic float multiply (bit-identical to the old float math)
+_UNIT_BYTES = 2.0 ** -11
+#: dense per-param unit costs by q (4 B, 1+1/64 B, 1/4+1/64 B — the
+#: +1/64 is the fp32 block scale amortized over a 256-wide block)
+_DENSE_UNITS = {0: 8192, 1: 2080, 2: 544}
+
+
 def _masked_wire_mb(delta, mask, q: int, topk=None) -> float:
-    """Actual bytes: only trainable leaves ship (continuous in the
-    masked fraction; the per-block formulas mirror compression.wire_bytes)."""
-    total = 0.0
+    """Actual bytes: only trainable leaves ship (exact-integer active
+    counts; the per-block formulas mirror compression.wire_bytes)."""
+    units = 0
     for leaf, m in zip(jax.tree.leaves(delta), jax.tree.leaves(mask)):
         m_arr = np.asarray(m)
-        frac = float(np.mean(m_arr)) if m_arr.ndim else float(m_arr)
-        n = frac * np.prod(leaf.shape)
+        if m_arr.ndim:
+            # masks broadcast against the leaf (per-unit singleton dims):
+            # each nonzero mask entry governs leaf.size/mask.size params
+            n = int(np.count_nonzero(m_arr)) * (
+                int(np.prod(leaf.shape)) // m_arr.size)
+        else:
+            n = int(np.prod(leaf.shape)) * int(m_arr.item())
         if q == 0 or topk is None or topk >= 256:
-            total += n * BYTES_PER_PARAM[q]
-            if q > 0:
-                total += 4.0 * (n / 256.0)
+            units += n * _DENSE_UNITS[q]
         else:
             bits = 8 if q == 1 else 2
-            blocks = n / 256.0
-            total += blocks * (topk * bits / 8.0 + 256.0 / 8.0 + 4.0)
-    return total / 1e6
+            # per param: topk*bits/256 code bits + 1 bitmask bit
+            # + 32/256 scale bits == (topk*bits + 288) units
+            units += n * (topk * bits + 288)
+    return compression.to_mb(units * _UNIT_BYTES)
+
+
+# ---------------------------------------------------------------------------
+# trace-analysis entry points (repro.analysis.trace)
+# ---------------------------------------------------------------------------
+
+#: the two operating points the static memory gate compares: the
+#: FedAvg baseline batch (calibration — its traced peak *defines*
+#: Table-1's 0.31 memory units, mirroring core.resources.calibrate)
+#: vs the CAFL-L adapted batch, which is gated against Budgets.memory
+TRACE_BASELINE_B = 32
+TRACE_ADAPTED_B = 8
+
+
+def _local_step(model, opt, params, opt_state, batch, mask):
+    """One full local step (grad + masked update) as a single program:
+    the unit whose peak the static memory gate prices."""
+    (loss, _), grads = jax.value_and_grad(model.train_loss, has_aux=True)(
+        params, batch)
+    new_params, opt_state = apply_masked_update(opt, params, opt_state,
+                                                grads, mask)
+    return loss, new_params, opt_state
+
+
+def _local_step_build(b: int):
+    def build():
+        from repro.analysis.trace.registry import charlm_trace_setup
+        runner, params, batch = charlm_trace_setup(b=b)
+        mask, _ = runner.mask_for(params, 0)
+        opt_state = runner._opt_init(params)
+        step = jax.jit(
+            functools.partial(_local_step, runner.model, runner.opt),
+            donate_argnums=(1,))
+        return step, (params, opt_state, batch, mask)
+    return build
+
+
+def _grad_step_build():
+    from repro.analysis.trace.registry import charlm_trace_setup
+    runner, params, batch = charlm_trace_setup(b=TRACE_ADAPTED_B)
+    return runner.grad_fn(), (params, batch)
+
+
+def _update_step_build():
+    from repro.analysis.trace.registry import charlm_trace_setup
+    runner, params, batch = charlm_trace_setup(b=TRACE_ADAPTED_B)
+    mask, _ = runner.mask_for(params, 0)
+    opt_state = runner._opt_init(params)
+    grads = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+    return runner._apply, (params, opt_state, grads, mask)
+
+
+def trace_entry_points() -> List[Any]:
+    """Declared traceable surfaces of the client update path."""
+    from repro.analysis.trace.registry import EntryPoint
+    path = "src/repro/core/client.py"
+    return [
+        EntryPoint(
+            name="fl.client_grad_step", path=path, line=89,
+            build=_grad_step_build,
+            note="value_and_grad of the char-LM train loss"),
+        EntryPoint(
+            name="fl.client_update_step", path=path, line=77,
+            build=_update_step_build, donatable=(1, 2),
+            note="masked optimizer step; opt-state + grads donated"),
+        EntryPoint(
+            name="fl.client_local_step", path=path, line=214,
+            build=_local_step_build(TRACE_ADAPTED_B), donatable=(1,),
+            gated=True,
+            note=f"grad + update at adapted b={TRACE_ADAPTED_B}"),
+        EntryPoint(
+            name="fl.client_local_step@baseline", path=path, line=214,
+            build=_local_step_build(TRACE_BASELINE_B), donatable=(1,),
+            calibration=True,
+            note=f"grad + update at baseline b={TRACE_BASELINE_B}"),
+    ]

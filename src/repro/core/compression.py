@@ -23,8 +23,6 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-from repro.core.resources import BYTES_PER_PARAM
-
 
 def compress_decompress(tree: Any, q: int, block: int = 256,
                         topk: Optional[int] = None) -> Any:
@@ -37,6 +35,18 @@ def compress_decompress(tree: Any, q: int, block: int = 256,
                                           topk=topk), tree)
 
 
+#: dyadic scale-out factor: integer *bit* counts -> bytes; exact in
+#: float (power of two), so the rewrite below is bit-identical to the
+#: old per-block float formulas
+_BYTES_PER_BIT = 0.125
+
+
+def to_mb(bytes_: float) -> float:
+    """The one float-division reporting edge for byte counts (exact
+    integer accounting everywhere upstream; see analysis rule REPRO003)."""
+    return bytes_ / 1e6
+
+
 def wire_bytes(tree: Any, q: int, block: int = 256,
                topk: Optional[int] = None) -> float:
     """Exact bytes of the shipped wire tuple.
@@ -45,25 +55,27 @@ def wire_bytes(tree: Any, q: int, block: int = 256,
     leaf ships ``ceil(n / block)`` blocks (the tail block is padded
     within itself; no ``ROWS_PER_TILE`` pad blocks — the kernel path
     strips those before return). Dense format: ``block`` codes at
-    bits/8 B each + one fp32 scale per block. Top-k format: ``topk``
+    ``bits`` each + one fp32 scale per block. Top-k format: ``topk``
     packed codes + a 1-bit/coordinate keep-bitmask + the scale.
+
+    Counted in integer bits, scaled out once — exact accounting.
     """
     leaves = jax.tree.leaves(tree)
     n = sum(int(np.prod(l.shape)) for l in leaves)
     if q == 0:
-        return n * BYTES_PER_PARAM[0]
+        return n * 32 * _BYTES_PER_BIT
     bits = 8 if q == 1 else 2
     n_blocks = sum(-(-int(np.prod(l.shape)) // block) for l in leaves)
     if topk is not None and topk < block:
-        codes = n_blocks * (topk * bits / 8.0 + block / 8.0)
+        code_bits = n_blocks * (topk * bits + block)
     else:
-        codes = n_blocks * block * bits / 8.0
-    return codes + 4.0 * n_blocks
+        code_bits = n_blocks * block * bits
+    return (code_bits + 32 * n_blocks) * _BYTES_PER_BIT
 
 
 def wire_mb(tree: Any, q: int, block: int = 256,
             topk: Optional[int] = None) -> float:
-    return wire_bytes(tree, q, block, topk) / 1e6
+    return to_mb(wire_bytes(tree, q, block, topk))
 
 
 def compression_error(tree: Any, q: int, block: int = 256,

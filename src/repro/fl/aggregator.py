@@ -526,6 +526,47 @@ class MaskedSumAggregator(Aggregator):
 
 
 # ---------------------------------------------------------------------------
+# trace-analysis entry points (repro.analysis.trace)
+# ---------------------------------------------------------------------------
+
+#: cohort size the combine entries are traced at (TRACE003 scales its
+#: dense-materialization threshold with this)
+TRACE_COHORT = 4
+
+
+def _combine_build(weighted: bool):
+    def build():
+        from repro.core.aggregation import aggregate
+        delta = {"w": jnp.zeros((64, 64), jnp.float32),
+                 "b": jnp.zeros((64,), jnp.float32)}
+        deltas = tuple(jax.tree.map(jnp.array, delta)
+                       for _ in range(TRACE_COHORT))
+        weights = ([1.0, 2.0, 3.0, 4.0] if weighted else None)
+
+        def combine(*ds):
+            return aggregate(list(ds), weights)
+
+        return combine, deltas
+    return build
+
+
+def trace_entry_points() -> List[object]:
+    """Declared traceable surfaces: the pure delta combines every
+    aggregator policy funnels through (O(P) incremental folds — the
+    TRACE003 rule proves no O(C*P) stack sneaks back in)."""
+    from repro.analysis.trace.registry import EntryPoint
+    path = "src/repro/fl/aggregator.py"
+    return [
+        EntryPoint(name="fl.aggregate_sync", path=path, line=246,
+                   build=_combine_build(False), cohort=TRACE_COHORT,
+                   note=f"unweighted mean combine, C={TRACE_COHORT}"),
+        EntryPoint(name="fl.aggregate_weighted", path=path, line=246,
+                   build=_combine_build(True), cohort=TRACE_COHORT,
+                   note=f"|D_i|-weighted combine, C={TRACE_COHORT}"),
+    ]
+
+
+# ---------------------------------------------------------------------------
 # resolution
 # ---------------------------------------------------------------------------
 

@@ -142,6 +142,35 @@ def _compress(raw_delta, mask, q: int, topk=None):
     return freezing.apply_mask(delta, mask)
 
 
+# ---------------------------------------------------------------------------
+# trace-analysis entry points (repro.analysis.trace)
+# ---------------------------------------------------------------------------
+
+
+def _batched_round_build():
+    from repro.analysis.trace.registry import (TRACE_MODEL,
+                                               charlm_trace_setup)
+    runner, params, _ = charlm_trace_setup(b=4)
+    ex = BatchedExecutor(runner)
+    mask, _ = runner.mask_for(params, 0)
+    seq = TRACE_MODEL["seq_len"]
+    batches = {
+        "tokens": jax.ShapeDtypeStruct((2, 2, 1, 4, seq), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((2, 2, 1, 4, seq), jnp.int32),
+    }
+    return ex._batched, (params, mask, batches)
+
+
+def trace_entry_points() -> List[object]:
+    """Declared traceable surface: the one jitted call a batched round
+    makes (vmap over clients of scan over steps of scan over micros)."""
+    from repro.analysis.trace.registry import EntryPoint
+    return [EntryPoint(
+        name="fl.executor_batched_round", path="src/repro/fl/executor.py",
+        line=58, build=_batched_round_build,
+        note="vmap(C=2) of scan(s=2) of scan(ga=1), b=4")]
+
+
 EXECUTORS = {
     "sequential": SequentialExecutor,
     "batched": BatchedExecutor,

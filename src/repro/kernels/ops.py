@@ -66,6 +66,23 @@ def quantize_dequantize(x, *, bits: int, block: int = 256,
     return deq.reshape(-1)[:n].reshape(shape).astype(dtype)
 
 
+_dequantize_blocks_ref_jit = jax.jit(ref.dequantize_blocks_ref)
+
+
+def dequantize_blocks(codes, scales):
+    """Decode wire blocks: (n_blocks, block) int8 codes x per-block f32
+    scales -> (n_blocks, block) f32 (code 0 -> exactly 0.0).
+
+    The server-side half of the wire round-trip, dispatched like every
+    other kernel: the Pallas ``quantize.dequantize_blocks`` kernel on
+    TPU, the pure-jnp ``dequantize_blocks_ref`` twin elsewhere.
+    """
+    if not _use_pallas():
+        return _dequantize_blocks_ref_jit(codes, scales)
+    interp = jax.default_backend() != "tpu"
+    return qk.dequantize_blocks(codes, scales, interpret=interp)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "topk"))
 def _quantize_wire_ref(blocks, bits: int, topk):
     if topk is not None:
@@ -203,3 +220,44 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                                    softcap=softcap, scale=scale,
                                    interpret=interp)
     return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# trace-analysis entry points (repro.analysis.trace)
+# ---------------------------------------------------------------------------
+
+
+def _wire_build(bits: int, topk: Optional[int]):
+    def build():
+        x = jax.ShapeDtypeStruct((1 << 16,), jnp.float32)
+
+        def fn(t):
+            return quantize_wire(t, bits=bits, topk=topk)
+
+        return fn, (x,)
+    return build
+
+
+def _masked_sum_build():
+    hi = jax.ShapeDtypeStruct((8, 4096), jnp.uint32)
+    lo = jax.ShapeDtypeStruct((8, 4096), jnp.uint32)
+    return masked_sum, (hi, lo)
+
+
+def trace_entry_points() -> list:
+    """Declared traceable surfaces: the wire pipeline at both formats
+    plus the secure-aggregation cohort fold (all pure uint32/f32 —
+    TRACE001 proves no 64-bit promotion sneaks onto the wire path)."""
+    from repro.analysis.trace.registry import EntryPoint
+    path = "src/repro/kernels/ops.py"
+    return [
+        EntryPoint(name="kernels.wire_dense", path=path, line=94,
+                   build=_wire_build(8, None),
+                   note="dense int8 wire tuple, 64k params"),
+        EntryPoint(name="kernels.wire_topk", path=path, line=94,
+                   build=_wire_build(2, 64),
+                   note="2-bit top-64 sparse wire tuple, 64k params"),
+        EntryPoint(name="kernels.masked_sum", path=path, line=157,
+                   build=_masked_sum_build,
+                   note="uint64-as-limbs cohort fold, C=8, n=4096"),
+    ]

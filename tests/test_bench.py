@@ -212,7 +212,8 @@ class TestOnlySelection:
 # -------------------------------------------------------------- registry
 
 EXPECTED = {"fl_engine": {"fl.executor", "fl.dynamics", "fl.aggregator",
-                          "fl.wall_clock", "fl.controller"},
+                          "fl.wall_clock", "fl.controller",
+                          "fl.memory_static"},
             "kernels": {"kernel.quantize_roundtrip",
                         "kernel.blockwise_attention", "charlm.grad_step"},
             "wire": {"wire.quantize_topk", "wire.masked_sum"}}
