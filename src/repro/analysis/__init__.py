@@ -11,6 +11,13 @@ Runtime half (``repro.analysis.runtime``): opt-in sanitizer contexts —
 ``jax.transfer_guard`` wiring and a jit recompile watcher — plus
 engine ``RoundCallback``s that pin the steady-state round loop at zero
 implicit transfers and zero recompiles after round 1.
+
+Schedule half (``repro.analysis.sched``): the determinism contract for
+the event-driven control plane — static SCHED rules (order-sensitive
+folds, unordered iteration, untied timestamps, shared RNG), a
+happens-before race checker over recorded runs, and the
+``SchedulePermuter`` that replays a run under adversarial legal event
+permutations (``python -m repro.analysis --sched``).
 """
 from __future__ import annotations
 

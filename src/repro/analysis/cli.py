@@ -49,6 +49,12 @@ def build_parser() -> argparse.ArgumentParser:
                         "jaxprs, run the TRACE rules and the static "
                         "memory gate, and diff TRACE_BUDGETS.json "
                         "(--update-baseline re-records the table)")
+    p.add_argument("--sched", action="store_true",
+                   help="also run the schedule-determinism sanitizer: "
+                        "replay the sched scenarios under adversarial "
+                        "legal event permutations, check the happens-"
+                        "before graph for uncertified races (SCHED005) "
+                        "and fail on any permutation mismatch")
     return p
 
 
@@ -97,6 +103,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         findings = assign_occurrences(findings + trace_report.findings)
         rules_run += trace_report.rules_run
 
+    sched_report = None
+    if args.sched:
+        # lazy: the sanitizer scenarios run the engine (jax + model)
+        from repro.analysis.sched import run_sched
+        sched_report = run_sched(args.root, update=args.update_baseline)
+        findings = assign_occurrences(findings + sched_report.findings)
+        rules_run += sched_report.rules_run
+
     baseline_path = args.baseline
     if baseline_path is None and os.path.exists(
             os.path.join(args.root, DEFAULT_BASELINE)) and not paths:
@@ -125,6 +139,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     else:
         new, suppressed, stale = list(findings), [], []
     problems = list(trace_report.problems) if trace_report else []
+    if sched_report is not None:
+        problems += list(sched_report.problems)
 
     if args.as_json:
         payload = {
@@ -138,7 +154,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             payload["trace"] = {
                 "entries": trace_report.rows_json(),
                 "gate": [r.to_json() for r in trace_report.gate],
-                "problems": problems,
+                "problems": list(trace_report.problems),
+            }
+        if sched_report is not None:
+            payload["sched"] = {
+                "scenarios": sched_report.rows_json(),
+                "problems": list(sched_report.problems),
             }
         print(json.dumps(payload, indent=2))
     else:
@@ -152,14 +173,21 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             from repro.analysis.trace import format_report
             print()
             print(format_report(trace_report))
-            for pr in problems:
+            for pr in trace_report.problems:
                 print(f"TRACE PROBLEM: {pr}")
+        if sched_report is not None:
+            from repro.analysis.sched import format_sched_report
+            print()
+            print(format_sched_report(sched_report))
+            for pr in sched_report.problems:
+                print(f"SCHED PROBLEM: {pr}")
         print(f"\n{result.files_scanned} files, "
               f"{len(rules_run)} rules: "
               f"{len(new)} new finding(s), {len(suppressed)} suppressed "
               f"by baseline, {len(stale)} stale baseline entr"
               f"{'y' if len(stale) == 1 else 'ies'}"
-              + (f", {len(problems)} trace problem(s)"
-                 if trace_report is not None else ""))
+              + (f", {len(problems)} runtime problem(s)"
+                 if trace_report is not None or sched_report is not None
+                 else ""))
 
     return EXIT_FINDINGS if (new or stale or problems) else EXIT_CLEAN

@@ -104,11 +104,13 @@ def default_rules() -> List[Rule]:
     """Instantiate every registered rule (importing the rule modules
     the first time so their ``@register_rule`` decorators run)."""
     from repro.analysis import rules_jax, rules_repro  # noqa: F401
+    from repro.analysis.sched import rules as rules_sched  # noqa: F401
     return [cls() for _, cls in sorted(_RULES.items())]
 
 
 def rule_ids() -> List[str]:
     from repro.analysis import rules_jax, rules_repro  # noqa: F401
+    from repro.analysis.sched import rules as rules_sched  # noqa: F401
     return sorted(_RULES)
 
 

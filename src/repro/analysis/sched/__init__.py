@@ -1,0 +1,57 @@
+"""``repro.analysis.sched`` — schedule-determinism analysis.
+
+Third pillar of the analysis stack (PR 8 AST rules, PR 9 trace rules):
+prove round results are invariant under the event schedule, or flag
+where they are not.
+
+    rules     static SCHED001-004 (registered into the shared engine)
+    hb        happens-before model over a recorded run: partial order
+              of report -> delivery -> apply -> dual events, plus the
+              race checker (HB-unordered events touching shared
+              aggregator/strategy state must be commutative-certified)
+    permute   the runtime sanitizer: ``SchedulePermuter`` replays a
+              run under adversarial legal schedule permutations and
+              asserts bit-identical (or tolerance-banded) results
+    gate      ``run_sched`` — the ``--sched`` CLI/CI entry point
+
+This module keeps imports light: the static rules are importable
+without jax; ``hb``/``permute``/``gate`` pull in the model stack and
+are loaded lazily on first attribute access.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.sched.rules import (  # noqa: F401
+    OrderSensitiveReportFold, SharedComponentRNG, SCHED_RULE_IDS,
+    UnorderedContainerIteration, UntiedTimestampOrder,
+)
+
+_LAZY = {
+    "HBGraph": "repro.analysis.sched.hb",
+    "SchedEvent": "repro.analysis.sched.hb",
+    "SchedRace": "repro.analysis.sched.hb",
+    "ScheduleRecorder": "repro.analysis.sched.hb",
+    "build_hb_graph": "repro.analysis.sched.hb",
+    "AdversarialTieQueue": "repro.analysis.sched.permute",
+    "PermutationReport": "repro.analysis.sched.permute",
+    "SchedulePermuter": "repro.analysis.sched.permute",
+    "ScheduleSanitizerCallback": "repro.analysis.sched.permute",
+    "run_signature": "repro.analysis.sched.permute",
+    "SchedReport": "repro.analysis.sched.gate",
+    "format_sched_report": "repro.analysis.sched.gate",
+    "run_sched": "repro.analysis.sched.gate",
+}
+
+
+def __getattr__(name: str):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(target), name)
+
+
+def __dir__() -> List[str]:
+    return sorted(list(globals()) + list(_LAZY))

@@ -57,8 +57,20 @@ class FederatedData:
         bounds = np.concatenate([[0], np.cumsum(_shard_sizes(w, len(data)))])
         self.shards = [data[bounds[i]:bounds[i + 1]]
                        for i in range(num_clients)]
-        self._rngs = [np.random.default_rng(seed + 1000 + i)
-                      for i in range(num_clients)]
+        self.seed = seed
+        self._rngs: list = []
+        self.reset_rngs()
+
+    def reset_rngs(self) -> None:
+        """Rewind every client's batch stream to its seeded origin.
+
+        The generators are mutable run state: a second ``run()`` on the
+        same engine continues the streams (fresh batches — the warm-
+        continuation behaviour). Replay tooling (``repro.analysis.sched``)
+        calls this so a re-run draws the exact same batches and any
+        result difference is attributable to the schedule alone."""
+        self._rngs = [np.random.default_rng(self.seed + 1000 + i)
+                      for i in range(self.num_clients)]
 
     def shard_size(self, i: int) -> int:
         return len(self.shards[i])

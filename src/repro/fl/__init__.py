@@ -25,7 +25,8 @@ from repro.fl.aggregator import (  # noqa: F401
     Aggregator, ClientReport, ConstantStaleness, FedBuffAggregator,
     MaskedSumAggregator, PolynomialStaleness, ServerUpdate,
     StalenessPolicy, StalenessWeightedAggregator, SyncAggregator,
-    make_aggregator, make_staleness_policy,
+    canonical_order, make_aggregator, make_staleness_policy,
+    report_order_key,
 )
 from repro.fl.callbacks import (  # noqa: F401
     CheckpointCallback, HistoryWriterCallback, LoggingCallback,

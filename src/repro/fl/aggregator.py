@@ -34,6 +34,22 @@ Four policies ship:
 *How* deltas are combined stays with ``FederatedStrategy.aggregate``
 (pure delta combination); the engine binds it via ``reset(combine)``
 so ``ServerOpt`` and weighted variants compose with every policy.
+
+Determinism contract (checked by ``repro.analysis.sched``): float
+combines are order-sensitive (reassociation changes bits), so every
+policy folds its buffered reports in *canonical report order* —
+``(round_trained, arrival_time, client_id)``, a total order over any
+report set — before touching the combine. That makes the applied
+update a pure function of the report *set*, never of delivery order;
+each class declares how via ``commutativity``:
+
+    "exact"      order-free by construction (uint64 masked sums are
+                 associative/commutative mod 2^64)
+    "canonical"  floats folded in canonical order (sync, staleness)
+    "tiebreak"   the *buffer composition* depends on delivery order
+                 (FedBuff fills every K arrivals), which the engine
+                 makes deterministic via ``TimedReport.sort_key``;
+                 each fill's fold is canonical-ordered
 """
 from __future__ import annotations
 
@@ -48,6 +64,24 @@ from repro.core.policy import Knobs
 from repro.fl.device import ClientInfo
 
 Combine = Callable[[Sequence, Optional[List[float]]], Any]
+
+
+def report_order_key(report: "ClientReport") -> Tuple[int, float, int]:
+    """The canonical total order over client reports: params version
+    first (oldest work folds first), then simulated arrival, then the
+    client id as the final tie-break. No two distinct reports compare
+    equal — client ids are unique within a fold — so a sort under this
+    key is schedule-independent."""
+    return (report.round_trained, report.arrival_time,
+            report.client.client_id)
+
+
+def canonical_order(reports: Sequence["ClientReport"]
+                    ) -> List["ClientReport"]:
+    """Sort reports into canonical order (``report_order_key``) so any
+    float fold over them is a function of the report *set*, not of the
+    delivery schedule. Every aggregator calls this before combining."""
+    return sorted(reports, key=report_order_key)
 
 
 # ---------------------------------------------------------------------------
@@ -177,11 +211,18 @@ class Aggregator:
     ``time_mode="wall_clock"`` such an update is the "buffer completes"
     event that *ends* the round: the next round begins at its simulated
     time, so buffered-async rounds are exactly as long as their fills.
+
+    ``commutativity`` is the policy's certificate under report-order
+    permutation (see the module docstring): "exact", "canonical" or
+    "tiebreak". ``repro.analysis.sched`` reads it to decide whether two
+    HB-unordered deliveries into the same aggregator state are benign;
+    a policy that declares none is flagged as a schedule race.
     """
 
     name = "base"
     accepts_late = False
     applies_mid_round = False
+    commutativity: Optional[str] = None
 
     def __init__(self):
         self._combine: Optional[Combine] = None
@@ -214,6 +255,9 @@ class Aggregator:
     def _emit(self, rnd: int, reports: Sequence[ClientReport],
               delta) -> ServerUpdate:
         self._applied += 1
+        # canonical order all the way out: ServerUpdate.reports and the
+        # staleness fold are schedule-independent like the delta itself
+        reports = canonical_order(reports)
         stale = (float(np.mean([r.staleness for r in reports]))
                  if reports else 0.0)
         return ServerUpdate(delta=delta, reports=tuple(reports), round=rnd,
@@ -226,6 +270,7 @@ class SyncAggregator(Aggregator):
     bit-identical to the PR 1/2 engine (golden trajectories pin it)."""
 
     name = "sync"
+    commutativity = "canonical"
 
     def __init__(self):
         super().__init__()
@@ -243,6 +288,7 @@ class SyncAggregator(Aggregator):
         if not self._buf:
             return None
         reports, self._buf = self._buf, []
+        reports = canonical_order(reports)
         delta = self._combine([r.delta for r in reports],
                               [r.weight for r in reports])
         return self._emit(rnd, reports, delta)
@@ -265,6 +311,7 @@ class StalenessWeightedAggregator(Aggregator):
 
     name = "staleness"
     accepts_late = True
+    commutativity = "canonical"
 
     def __init__(self, policy: Optional[StalenessPolicy] = None,
                  mode: str = "scale"):
@@ -286,6 +333,7 @@ class StalenessWeightedAggregator(Aggregator):
         if not self._buf:
             return None
         reports, self._buf = self._buf, []
+        reports = canonical_order(reports)
         discounts = [self.policy.discount(r.staleness) for r in reports]
         if self.mode == "scale":
             deltas = [_scale_delta(r.delta, d)
@@ -312,6 +360,7 @@ class FedBuffAggregator(Aggregator):
     name = "fedbuff"
     accepts_late = True
     applies_mid_round = True
+    commutativity = "tiebreak"
 
     def __init__(self, buffer_size: int = 4,
                  policy: Optional[StalenessPolicy] = None):
@@ -341,6 +390,7 @@ class FedBuffAggregator(Aggregator):
 
     def _apply_buffer(self, rnd):
         reports, self._buf = self._buf, []
+        reports = canonical_order(reports)
         # staleness is measured at APPLY time (FedBuff's tau): a report
         # that sat in the buffer across rounds aged while earlier fills
         # moved the params, so its discount must keep accruing
@@ -389,6 +439,7 @@ class MaskedSumAggregator(Aggregator):
     """
 
     name = "masked"
+    commutativity = "exact"
 
     def __init__(self, scale_bits: int = 32, use_weights: bool = False,
                  seed: int = 0, path: str = "kernel"):
@@ -507,13 +558,16 @@ class MaskedSumAggregator(Aggregator):
             for alive in sorted(reported):
                 total = self._add_masks(total, alive, dropped, sign=-1)
                 self._reconstructed += 1
-        tot_w = sum(self._weight(r) for r in self._reporters)
+        # the masked fold itself is exact mod 2^64 in any order; the
+        # float weight total still folds canonically so the dequantized
+        # mean is schedule-independent bit-for-bit too
+        reports = canonical_order(self._reporters)
+        tot_w = sum(self._weight(r) for r in reports)
         leaves = [jnp.asarray(
             (x.view(np.int64).astype(np.float64)
              / (self.scale * tot_w)).astype(np.float32))
             for x in total]
         mean = jax.tree.unflatten(self._treedef, leaves)
-        reports = tuple(self._reporters)
         self._reporters, self._sum, self._pending = [], None, []
         # the masked protocol fixes the combination to a weighted mean;
         # hand it through combine as one delta so ServerOpt composes

@@ -42,6 +42,7 @@ modes.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
@@ -173,13 +174,22 @@ class TimedReport:
     ``seq`` is the stamping order: simultaneous arrivals resolve to it,
     so a homogeneous cohort (identical finish times) delivers in cohort
     order — exactly the rounds-mode inbox order, which keeps the
-    no-straggler wall-clock stream bit-identical to ``"rounds"``."""
+    no-straggler wall-clock stream bit-identical to ``"rounds"``.
+
+    ``tie`` sits between ``arrival`` and ``seq`` in the sort key. It is
+    0.0 in production (the key degenerates to ``(arrival, seq)``); the
+    schedule sanitizer (``repro.analysis.sched``) stamps seeded random
+    ties to replay a run under a different — but equally legal —
+    resolution of simultaneous arrivals. Any ordering the sanitizer can
+    produce respects every arrival time, so a run whose results change
+    under it was reading the tie-break, not the physics."""
     arrival: float                # absolute simulated arrival time
     report: object                # the ClientReport to deliver
     seq: int = 0                  # tie-break: stamping order
+    tie: float = 0.0              # adversarial tie-break (sanitizer only)
 
     def sort_key(self):
-        return (self.arrival, self.seq)
+        return (self.arrival, self.tie, self.seq)
 
 
 @dataclass
@@ -194,12 +204,31 @@ class EventQueue:
     def stamp(self, arrival: float, report) -> TimedReport:
         """Mint an ordered event without queueing it (the engine stamps
         the current round's own finishes this way so they interleave
-        deterministically with queued late arrivals)."""
-        ev = TimedReport(float(arrival), report, self._seq)
+        deterministically with queued late arrivals).
+
+        A NaN arrival is rejected here, not at sort time: NaN compares
+        false against everything, so a NaN-stamped event would silently
+        mis-sort (and ``pop_until`` would never deliver it). Infinite
+        arrivals are rejected for the same reason — they can only mean
+        a broken straggler draw upstream."""
+        arrival = float(arrival)
+        if not math.isfinite(arrival):
+            raise ValueError(
+                f"event arrival time must be finite, got {arrival!r}; "
+                f"NaN/inf arrivals silently mis-sort the event queue")
+        ev = TimedReport(arrival, report, self._seq)
         self._seq += 1
         return ev
 
     def push(self, arrival: float, report) -> None:
+        """Queue a report for delivery at ``arrival``. Arrivals must be
+        non-negative simulated seconds (the clock's origin is 0.0 and
+        time is monotone — see ``SimClock``); ``stamp`` already rejects
+        NaN/inf."""
+        if float(arrival) < 0.0:
+            raise ValueError(
+                f"event arrival time must be >= 0, got {arrival!r}; "
+                f"simulated time starts at 0.0 and never runs backwards")
         self._items.append(self.stamp(arrival, report))
 
     def push_event(self, ev: TimedReport) -> None:

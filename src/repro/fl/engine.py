@@ -77,7 +77,7 @@ from repro.core.server import FLResult, RoundRecord, make_eval_fn
 from repro.data.federated import FederatedData
 from repro.data.shakespeare import CharDataset
 from repro.fl.aggregator import (Aggregator, ClientReport, ServerUpdate,
-                                 make_aggregator)
+                                 canonical_order, make_aggregator)
 from repro.fl.callbacks import RoundCallback
 from repro.fl.clock import (TIME_MODES, EventQueue, RoundTimeModel, SimClock,
                             make_round_time)
@@ -102,7 +102,8 @@ class FederatedEngine:
                  callbacks: Sequence[RoundCallback] = (),
                  resources: Optional[ResourceModel] = None,
                  init_duals: Optional[DualState] = None,
-                 round_time: Union[str, RoundTimeModel, None] = None):
+                 round_time: Union[str, RoundTimeModel, None] = None,
+                 event_queue: Optional[Callable[[], EventQueue]] = None):
         self.model = model
         self.fl = fl
         self.dataset = dataset
@@ -123,6 +124,10 @@ class FederatedEngine:
         self.callbacks = list(callbacks)
         self._base_resources = resources
         self.round_time = make_round_time(round_time, fl)
+        # wall-clock event-queue factory: the schedule sanitizer
+        # (repro.analysis.sched) swaps in a queue that stamps
+        # adversarial tie-breaks; None keeps the plain EventQueue
+        self.event_queue_factory = event_queue
 
         self.data = FederatedData(dataset.train, fl.num_clients, seed=fl.seed,
                                   noniid_alpha=fl.noniid_alpha)
@@ -130,6 +135,7 @@ class FederatedEngine:
         self.profiles: Dict[str, DeviceProfile] = {}
         self.time_mode = fl.time_mode  # resolved per run()
         self.clock: Optional[SimClock] = None
+        self._runner_cache = None     # (params0, runner, executor)
 
     # ------------------------------------------------------------------
     def _setup(self, init_params):
@@ -144,10 +150,17 @@ class FederatedEngine:
             base = calibrate(count_params(params), fl)
         self.profiles = {name: p.with_resources(base)
                          for name, p in self._profiles_raw.items()}
-        runner = ClientRunner(self.model, fl, self.data, base)
-        executor = (make_executor(self._executor_spec, runner)
-                    if isinstance(self._executor_spec, str)
-                    else self._executor_spec(runner))
+        # the runner/executor pair is stateless across runs (it holds
+        # only jit caches) — reuse it so repeated run() calls on one
+        # engine (the schedule sanitizer replays a run many times) pay
+        # compilation once
+        if self._runner_cache is None:
+            runner = ClientRunner(self.model, fl, self.data, base)
+            executor = (make_executor(self._executor_spec, runner)
+                        if isinstance(self._executor_spec, str)
+                        else self._executor_spec(runner))
+            self._runner_cache = (runner, executor)
+        runner, executor = self._runner_cache
         return params, runner, executor
 
     def _client_info(self, cid: int) -> ClientInfo:
@@ -253,7 +266,9 @@ class FederatedEngine:
         # client-rounds
         pending: Dict[int, List[ClientReport]] = {}
         busy_until: Dict[int, int] = {}
-        pending_q = EventQueue()
+        pending_q = (self.event_queue_factory()
+                     if self.event_queue_factory is not None
+                     else EventQueue())
         busy: set = set()
 
         self.params = params
@@ -274,7 +289,10 @@ class FederatedEngine:
                 roster = ([ci for ci in fleet if ci.client_id not in busy]
                           if busy else fleet)
             else:
-                for cid in [c for c, due in busy_until.items() if due < t]:
+                # sorted: dict order here is insertion (= past delivery)
+                # order; expiry must not depend on it
+                for cid in sorted(c for c, due in busy_until.items()
+                                  if due < t):
                     del busy_until[cid]
                 roster = ([ci for ci in fleet
                            if ci.client_id not in busy_until]
@@ -448,21 +466,29 @@ class FederatedEngine:
                             list(surv_idx) + late_idx, lost_idx)
 
             # --- constraint accounting over the reports delivered -----
-            usages = [cset.measure(rep) for rep in inbox]
-            if inbox:
+            # folded over the *canonical* report order, not the
+            # delivery order: the float means (and through them the
+            # dual trajectory) are a function of the report set, so a
+            # schedule permutation that only reorders simultaneous
+            # deliveries cannot move a single bit of the accounting.
+            # `inbox` itself keeps delivery order — participants /
+            # late_arrivals are schedule telemetry and record it.
+            stats = canonical_order(inbox)
+            usages = [cset.measure(rep) for rep in stats]
+            if stats:
                 usage = {n: float(np.mean([u[n] for u in usages]))
                          for n in cset.names}
                 train_loss = float(np.mean([rep.train_loss
-                                            for rep in inbox]))
+                                            for rep in stats]))
                 wire_mb = float(np.mean([rep.wire_mb_actual
-                                         for rep in inbox]))
-                energy = float(np.mean([rep.energy_true for rep in inbox]))
+                                         for rep in stats]))
+                energy = float(np.mean([rep.energy_true for rep in stats]))
             else:               # everyone dropped / nobody reachable
                 usage = cset.zero_usage()
                 train_loss = wire_mb = energy = 0.0
             ratios = cset.ratios(usage, fl.budgets)
             duals_by_profile = self.strategy.update_state(
-                usages, [rep.client for rep in inbox])
+                usages, [rep.client for rep in stats])
             creports = self.strategy.constraint_reports()
             if creports:
                 self._emit("on_dual_update", t, creports)
@@ -490,18 +516,18 @@ class FederatedEngine:
                 sim_time=clock.now,
                 round_seconds=clock.now - round_start,
                 per_profile=_per_profile_record(
-                    [rep.client for rep in inbox],
-                    [rep.policy_knobs for rep in inbox], usages,
+                    [rep.client for rep in stats],
+                    [rep.policy_knobs for rep in stats], usages,
                     duals_by_profile, cset)
-                if heterogeneous and inbox else {},
+                if heterogeneous and stats else {},
                 participants=[rep.client.client_id for rep in inbox],
                 dropped=[clients[i].client_id for i in lost_idx],
                 num_available=len(avail),
                 updates_applied=len(applied),
                 reports_applied=sum(len(u.reports) for u in applied),
                 mean_staleness=(float(np.mean([rep.staleness
-                                               for rep in inbox]))
-                                if inbox else 0.0),
+                                               for rep in stats]))
+                                if stats else 0.0),
                 late_arrivals=[rep.client.client_id for rep in arrived])
             result.history.append(record)
             self._emit("on_round_end", record)
@@ -550,20 +576,23 @@ def _default_duals(duals_by_profile: Dict[str, Dict[str, float]],
 def _per_profile_record(clients: List[ClientInfo], knobs, usages,
                         duals_by_profile,
                         cset: ConstraintSet) -> Dict[str, Dict]:
+    """Per-device-profile round record: usage means grouped by profile
+    as one masked array reduction over the (client, constraint) usage
+    matrix — the grouping is O(profiles) Python, never O(clients)."""
+    profiles = {ci.profile.name: ci.profile for ci in clients}
+    name_arr = np.asarray([ci.profile.name for ci in clients])
+    usage_mat = np.asarray([[u[n] for n in cset.names] for u in usages],
+                           dtype=np.float64)
     out: Dict[str, Dict] = {}
-    for ci, kn, u in zip(clients, knobs, usages):
-        name = ci.profile.name
-        slot = out.setdefault(name, {"clients": 0, "knobs": kn.as_dict(),
-                                     "usage": cset.zero_usage()})
-        slot["clients"] += 1
-        for n in cset.names:
-            slot["usage"][n] += u[n]
-    for name, slot in out.items():
-        n_clients = slot["clients"]
-        slot["usage"] = {n: v / n_clients for n, v in slot["usage"].items()}
-        profile = next(ci.profile for ci in clients
-                       if ci.profile.name == name)
-        slot["ratios"] = cset.ratios(slot["usage"], profile.budgets)
-        if name in duals_by_profile:
-            slot["duals"] = dict(duals_by_profile[name])
+    for pname in sorted(profiles):
+        mask = name_arr == pname
+        mean = usage_mat[mask].mean(axis=0)
+        usage = {n: float(v) for n, v in zip(cset.names, mean)}
+        slot = {"clients": int(mask.sum()),
+                "knobs": knobs[int(np.argmax(mask))].as_dict(),
+                "usage": usage,
+                "ratios": cset.ratios(usage, profiles[pname].budgets)}
+        if pname in duals_by_profile:
+            slot["duals"] = dict(duals_by_profile[pname])
+        out[pname] = slot
     return out

@@ -1,0 +1,14 @@
+"""Clean SCHED patterns: canonical-order folds, engine-threaded rng."""
+import numpy as np
+
+
+def combine(reports):
+    stats = sorted(reports, key=lambda r: (r.round, r.client_id))
+    total = 0.0
+    for r in stats:                   # canonical order: schedule-free
+        total += r.value
+    return total, float(np.mean([r.value for r in stats]))
+
+
+def jitter(rng, n):
+    return rng.normal(size=n)         # rng threaded by the engine: fine

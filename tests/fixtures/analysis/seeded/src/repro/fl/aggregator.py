@@ -1,0 +1,24 @@
+"""Seeded SCHED001/SCHED004 violations: delivery-order report folds
+and component-owned RNG streams."""
+import numpy as np
+
+_RNG = np.random.default_rng(0)       # SCHED004: module-level shared rng
+
+
+class JitterPolicy:
+    def __init__(self):
+        # SCHED004 twice: rng on component state, and unseeded
+        self.rng = np.random.default_rng()
+
+    def pick(self, reports):
+        np.random.shuffle(reports)    # SCHED004: global singleton draw
+        return reports[0]
+
+
+def combine(reports):
+    total = 0.0
+    for r in reports:                 # SCHED001: += over delivery order
+        total += r.value
+    # SCHED001: fold over a comprehension iterating the buffer
+    mean = np.mean([r.value for r in reports])
+    return total, mean

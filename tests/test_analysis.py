@@ -18,7 +18,8 @@ SEEDED = os.path.join(HERE, "fixtures", "analysis", "seeded")
 CLEAN = os.path.join(HERE, "fixtures", "analysis", "clean")
 
 ALL_RULES = ("JAX001", "JAX002", "JAX003", "JAX004",
-             "REPRO001", "REPRO002", "REPRO003")
+             "REPRO001", "REPRO002", "REPRO003",
+             "SCHED001", "SCHED002", "SCHED003", "SCHED004")
 
 
 @pytest.fixture(scope="module")
@@ -61,6 +62,16 @@ def test_clean_tree_is_clean(clean_result):
     ("REPRO002", "benchmarks/bench_bad.py", "direction"),
     ("REPRO003", "src/mod_repro003.py", "wire accounting"),
     ("REPRO003", "src/mod_repro003.py", "token_budget"),
+    ("SCHED001", "src/repro/fl/aggregator.py", "accumulation inside a loop"),
+    ("SCHED001", "src/repro/fl/aggregator.py", "folds report buffer"),
+    ("SCHED002", "src/repro/fl/clock.py", "insertion order"),
+    ("SCHED002", "src/repro/fl/clock.py", "per-process order"),
+    ("SCHED003", "src/repro/fl/clock.py", "bare timestamp '.arrival'"),
+    ("SCHED003", "src/repro/fl/clock.py", "bare timestamp '.t'"),
+    ("SCHED004", "src/repro/fl/aggregator.py", "module-level RNG"),
+    ("SCHED004", "src/repro/fl/aggregator.py", "without a seed"),
+    ("SCHED004", "src/repro/fl/aggregator.py", "component state"),
+    ("SCHED004", "src/repro/fl/aggregator.py", "global RNG singleton"),
 ])
 def test_seeded_violation_is_found(seeded_result, rule, path, needle):
     hits = [f for f in seeded_result.findings

@@ -1,0 +1,214 @@
+"""Schedule-determinism analysis (repro.analysis.sched): the
+happens-before model over recorded runs, the adversarial tie queue,
+signature comparison, and — as the tier-1 acceptance gate — the
+SchedulePermuter proving a 3-round wall-clock FedBuff run and a
+MaskedSum cohort shuffle invariant under adversarial legal event
+permutations."""
+import math
+from types import SimpleNamespace
+
+import pytest
+
+from repro.analysis.sched import (AdversarialTieQueue, HBGraph, SchedEvent,
+                                  ScheduleRecorder, ScheduleSanitizerCallback,
+                                  SchedulePermuter)
+from repro.analysis.sched.gate import SCENARIOS, _tiny_stack, run_scenario
+from repro.analysis.sched.permute import compare_signatures
+
+
+# ---------------------------------------------------------------------------
+# happens-before model (pure: hand-built event streams)
+# ---------------------------------------------------------------------------
+
+
+def _ev(kind, rnd, time, index, client=-1, clients=()):
+    return SchedEvent(kind=kind, round=rnd, time=time, index=index,
+                      client=client, clients=tuple(clients))
+
+
+@pytest.fixture()
+def tied_round():
+    """round_start; c0 and c1 arrive simultaneously; their apply; a
+    later c2 + apply; dual; round_end."""
+    return HBGraph([
+        _ev("round_start", 0, 0.0, 0),
+        _ev("deliver", 0, 1.0, 1, client=0),
+        _ev("deliver", 0, 1.0, 2, client=1),
+        _ev("apply", 0, 1.0, 3, clients=(0, 1)),
+        _ev("deliver", 0, 2.0, 4, client=2),
+        _ev("apply", 0, 2.0, 5, clients=(2,)),
+        _ev("dual", 0, 2.0, 6),
+        _ev("round_end", 0, 2.0, 7),
+    ])
+
+
+def test_hb_orders_strict_time_and_causality(tied_round):
+    g = tied_round
+    assert g.happens_before(0, 1)          # round_start before everything
+    assert g.happens_before(0, 7)
+    assert g.happens_before(1, 3)          # delivery -> its apply
+    assert g.happens_before(2, 3)
+    assert g.happens_before(3, 4)          # strictly earlier clock reading
+    assert g.happens_before(1, 4)          # ... transitively from t=1.0
+    assert g.happens_before(4, 5)          # delivery -> apply, same instant
+    assert g.happens_before(5, 6) and g.happens_before(5, 7)
+    assert not g.happens_before(4, 1)      # edges only point forward
+
+
+def test_hb_simultaneous_deliveries_are_schedule_freedom(tied_round):
+    pairs = tied_round.unordered_pairs()
+    assert [(a.index, b.index) for a, b in pairs] == [(1, 2)]
+
+
+@pytest.mark.parametrize("cert,tie_broken,expect_certified", [
+    ("exact", True, True),
+    ("canonical", True, True),
+    ("tiebreak", True, True),
+    ("tiebreak", False, False),
+    (None, True, False),
+])
+def test_hb_race_certification(tied_round, cert, tie_broken,
+                               expect_certified):
+    races = tied_round.races(cert, tie_broken=tie_broken)
+    assert len(races) == 1                 # the (c0, c1) delivery pair
+    race = races[0]
+    assert race.state == ("aggregator",)
+    assert race.certified is expect_certified
+    assert ("RACE" in race.describe()) is (not expect_certified)
+
+
+def test_hb_per_client_deliveries_are_chained():
+    # same client reports twice at the same instant (re-report): the
+    # one-device rule sequences them even though time does not
+    g = HBGraph([
+        _ev("deliver", 0, 1.0, 0, client=0),
+        _ev("deliver", 0, 1.0, 1, client=0),
+        _ev("deliver", 0, 1.0, 2, client=1),
+    ])
+    assert g.happens_before(0, 1)
+    assert not g.happens_before(0, 2) and not g.happens_before(2, 0)
+
+
+def test_hb_round_boundary_orders_across_rounds():
+    g = HBGraph([
+        _ev("round_start", 0, 0.0, 0),
+        _ev("deliver", 0, 1.0, 1, client=0),
+        _ev("round_end", 0, 1.0, 2),
+        _ev("round_start", 1, 1.0, 3),
+        _ev("deliver", 1, 1.0, 4, client=1),
+    ])
+    # c0's delivery and c1's are time-tied, but the round boundary
+    # between them forces the order
+    assert g.happens_before(1, 4)
+    assert g.happens_before(2, 3)
+    assert g.unordered_pairs() == []
+
+
+def test_recorder_rejects_truncated_clock_log():
+    rec = ScheduleRecorder()
+    clock = SimpleNamespace(event_count=5,
+                            events=[("deliver:c0", 1.0, 1.0)], now=1.0)
+    with pytest.raises(ValueError, match="truncated"):
+        rec.events(SimpleNamespace(clock=clock))
+
+
+# ---------------------------------------------------------------------------
+# adversarial ties + signature comparison (pure units)
+# ---------------------------------------------------------------------------
+
+
+def test_adversarial_tie_queue_is_legal_and_replayable():
+    def deliveries(seed):
+        q = AdversarialTieQueue(seed=seed)
+        for i, arrival in enumerate([2.0, 1.0, 1.0, 1.0, 2.0]):
+            q.push(arrival, f"r{i}")
+        return [(e.arrival, e.report) for e in q.drain()]
+
+    a, b, c = deliveries(0), deliveries(0), deliveries(1)
+    assert a == b                          # replayable per seed
+    # legal: arrival order is always respected ...
+    assert [t for t, _ in a] == sorted(t for t, _ in a)
+    assert {r for _, r in a} == {r for _, r in c}
+    # ... and some seed pair resolves the t=1.0 tie differently
+    assert any(deliveries(s) != a for s in range(1, 8))
+    # ties are finite and sit strictly inside the tie-break slot
+    ev = AdversarialTieQueue(seed=3).stamp(1.0, "r")
+    assert math.isfinite(ev.tie) and ev.arrival == 1.0
+
+
+def _sig(val=1.0, knobs=None, order=(0, 1)):
+    return {"rounds": [{
+        "round": 0, "val_loss": val, "train_loss": 1.0,
+        "wire_mb_actual": 1.0, "energy_true": 1.0, "mean_staleness": 0.0,
+        "sim_time": 1.0, "round_seconds": 1.0, "updates_applied": 1,
+        "reports_applied": 2, "num_available": 2,
+        "usage": {"t": 1.0}, "ratios": {"t": 1.0}, "duals": {"t": 0.0},
+        "knobs": knobs or {"k": 2}, "participants": frozenset(order),
+        "participant_order": tuple(order), "dropped": frozenset(),
+    }], "final": []}
+
+
+def test_compare_signatures_modes():
+    base = _sig()
+    assert compare_signatures(base, _sig(), "exact") == []
+    drift = _sig(val=1.0 + 1e-9)
+    assert compare_signatures(base, drift, "exact")       # bit-exact fails
+    assert compare_signatures(base, drift, "tolerance") == []
+    # knob/int/set fields stay exact in every mode
+    assert compare_signatures(base, _sig(knobs={"k": 3}), "tolerance")
+    # participant_order is telemetry: permuted delivery alone must match
+    assert compare_signatures(base, _sig(order=(1, 0)), "exact") == []
+
+
+# ---------------------------------------------------------------------------
+# tier-1 acceptance: the permuter over real engine runs
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_stack():
+    return _tiny_stack()
+
+
+def test_masked_cohort_shuffle_is_bit_identical(tiny_stack):
+    model, fl, ds = tiny_stack
+    row, findings, problems = run_scenario("masked_shuffle", model, fl, ds)
+    assert problems == [] and findings == []
+    assert row["commutativity"] == "exact" and row["mode"] == "exact"
+    assert row["total_swapped"] > 0        # the shuffle really happened
+    assert row["mismatches"] == [] and row["races"] == 0
+
+
+def test_fedbuff_wall_clock_invariant_under_permutations(tiny_stack):
+    model, fl, ds = tiny_stack
+    row, findings, problems = run_scenario("fedbuff_wall", model, fl, ds)
+    assert problems == [] and findings == []
+    assert row["permutations"] >= 8 and row["mode"] == "exact"
+    assert row["total_swapped"] > 0        # non-vacuous: orders changed
+    assert row["mismatches"] == []
+    assert row["races"] == 0               # tiebreak certificate holds
+    assert row["unordered_pairs"] > 0      # there was freedom to race in
+
+
+def test_sanitizer_callback_rides_along_strict(tiny_stack):
+    model, fl, ds = tiny_stack
+    sanitizer = ScheduleSanitizerCallback()          # strict=True
+    eng, _ = SCENARIOS["sync_ties"](model, fl, ds, sanitizer)
+    eng.run(time_mode="wall_clock")                  # must not raise
+    assert sanitizer.graph is not None
+    assert sanitizer.races == []
+    assert len(sanitizer.certified) == len(
+        sanitizer.graph.races(eng.aggregator.commutativity))
+
+
+def test_permuter_restores_engine_configuration(tiny_stack):
+    model, fl, ds = tiny_stack
+    eng, kw = SCENARIOS["sync_ties"](model, fl, ds,
+                                     ScheduleSanitizerCallback(strict=False))
+    strategy, factory = eng.strategy, eng.event_queue_factory
+    kw["permutations"] = 1
+    report = SchedulePermuter(eng, run_kwargs={"time_mode": "wall_clock"},
+                              **kw).run()
+    assert report.ok()
+    assert eng.strategy is strategy        # caller's objects put back
+    assert eng.event_queue_factory is factory

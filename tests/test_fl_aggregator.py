@@ -16,7 +16,7 @@ from repro.core import aggregation
 from repro.core.policy import Knobs
 from repro.data import load_corpus
 from repro.fl import (ClientInfo, ClientReport, ConstantStaleness,
-                      DeadlineStragglers, DeviceProfile, FedAvg,
+                      DeadlineStragglers, DeviceProfile, EventQueue, FedAvg,
                       FedBuffAggregator, FederatedEngine, FleetDynamics,
                       MaskedSumAggregator, PolynomialStaleness, RoundCallback,
                       StalenessWeightedAggregator, SyncAggregator,
@@ -282,6 +282,109 @@ def test_masked_sum_edges():
     np.testing.assert_allclose(np.asarray(agg.flush(3).delta["w"]), 4.0,
                                rtol=0, atol=1e-7)
     assert agg.state_snapshot()["masks_reconstructed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# commutativity certificates: the determinism contract, unit-level
+# ---------------------------------------------------------------------------
+
+
+def _update_bytes(upd):
+    return np.asarray(upd.delta["w"]).tobytes()
+
+
+def _check_barrier_commutes(kind, values, perm):
+    """Sync/MaskedSum certificates: the flushed update is a function of
+    the report *set* — any submission-order permutation is bit-exact."""
+    def run(order):
+        if kind == "sync":
+            agg = SyncAggregator()
+            agg.reset(FedAvg(FLC, weighted=True).aggregate)
+        else:
+            agg = MaskedSumAggregator(use_weights=True, path="numpy")
+            agg.reset(FedAvg(FLC).aggregate)
+            agg.begin_round(1, [_ci(i) for i in range(len(values))])
+        for i in order:
+            assert agg.submit(
+                _report(i, values[i], weight=1.0 + (i % 3))) is None
+        return _update_bytes(agg.flush(1))
+    assert run(perm) == run(range(len(values)))
+
+
+def _check_streaming_tiebroken(kind, specs, seed):
+    """FedBuff/StalenessWeighted certificate: with distinct arrivals the
+    sort_key order is a function of the report set alone, so any
+    push-order shuffle delivers the same sequence — and the update
+    stream it produces must be bit-identical."""
+    def run(push_order):
+        if kind == "fedbuff":
+            agg = FedBuffAggregator(buffer_size=2,
+                                    policy=PolynomialStaleness(0.5))
+        else:
+            agg = StalenessWeightedAggregator(
+                policy=ConstantStaleness(0.5), mode="scale")
+        agg.reset(FedAvg(FLC).aggregate)
+        q = EventQueue()
+        for i in push_order:
+            value, stale, arrival = specs[i]
+            q.push(arrival, _report(i, value, staleness=stale, rnd=4))
+        out = []
+        for ev in q.drain():
+            upd = agg.submit(ev.report)
+            if upd is not None:
+                out.append(_update_bytes(upd))
+        tail = agg.flush(4)
+        if tail is not None:
+            out.append(_update_bytes(tail))
+        return out
+    n = len(specs)
+    perm = list(np.random.default_rng(seed).permutation(n))
+    ident = run(list(range(n)))
+    assert ident                           # something was applied
+    assert run(perm) == ident
+
+
+def _specs(rng, n):
+    # distinct arrivals by construction: the tie-break is the sort key's
+    # *arrival* component, exercised without ties
+    arrivals = rng.permutation(n) * 1.0
+    return [(float(rng.normal()), int(rng.integers(0, 4)), float(a))
+            for a in arrivals]
+
+
+@pytest.mark.parametrize("kind", ["sync", "masked"])
+def test_barrier_fold_commutes_grid(kind):
+    rng = np.random.default_rng(7)
+    for n in (1, 3, 6):
+        _check_barrier_commutes(kind, list(rng.normal(size=n)),
+                                list(rng.permutation(n)))
+
+
+@pytest.mark.parametrize("kind", ["fedbuff", "staleness"])
+def test_streaming_tiebroken_grid(kind):
+    rng = np.random.default_rng(11)
+    for n in (2, 4, 7):
+        _check_streaming_tiebroken(kind, _specs(rng, n), seed=n)
+
+
+if HAVE_HYPOTHESIS:
+    @given(values=st.lists(st.floats(min_value=-1e3, max_value=1e3,
+                                     allow_nan=False, allow_infinity=False),
+                           min_size=1, max_size=8),
+           kind=st.sampled_from(["sync", "masked"]),
+           seed=st.integers(min_value=0, max_value=2 ** 16))
+    @settings(deadline=None, max_examples=40)
+    def test_barrier_fold_commutes(values, kind, seed):
+        perm = list(np.random.default_rng(seed).permutation(len(values)))
+        _check_barrier_commutes(kind, values, perm)
+
+    @given(n=st.integers(min_value=2, max_value=8),
+           kind=st.sampled_from(["fedbuff", "staleness"]),
+           seed=st.integers(min_value=0, max_value=2 ** 16))
+    @settings(deadline=None, max_examples=40)
+    def test_streaming_tiebroken(n, kind, seed):
+        rng = np.random.default_rng(seed)
+        _check_streaming_tiebroken(kind, _specs(rng, n), seed=seed + 1)
 
 
 # ---------------------------------------------------------------------------

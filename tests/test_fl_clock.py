@@ -103,6 +103,21 @@ def test_event_queue_partition_seeded_sweep():
     _check_queue_partition([2.0, 2.0, 2.0], 2.0)           # all-tie cut
 
 
+def test_event_queue_rejects_illegal_arrivals():
+    q = EventQueue()
+    with pytest.raises(ValueError, match=">= 0"):
+        q.push(-0.5, "r")
+    for bad in (math.nan, math.inf, -math.inf):
+        with pytest.raises(ValueError, match="finite"):
+            q.stamp(bad, "r")
+    for bad in (math.nan, math.inf):       # -inf trips the >= 0 check
+        with pytest.raises(ValueError, match="finite"):
+            q.push(bad, "r")
+    assert len(q) == 0                     # nothing half-queued
+    q.push(0.0, "ok")
+    assert len(q) == 1
+
+
 if HAVE_HYPOTHESIS:
     @settings(deadline=None, max_examples=100)
     @given(st.lists(st.floats(min_value=0.0, max_value=1e6,
